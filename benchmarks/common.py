@@ -1,0 +1,20 @@
+"""Shared helpers for the benchmark harness."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters: int = 3, warmup: int = 1):
+    """us per call of a jitted function on this host (CPU container)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call, derived: str):
+    print(f"{name},{us_per_call},{derived}")

@@ -1,0 +1,27 @@
+"""Paper Fig 10: mobile-bottleneck utilization, baseline vs FuSe-Half."""
+from repro.systolic.simulator import bottleneck_utilizations, simulate_network
+from repro.vision import zoo
+
+from benchmarks.common import emit
+
+
+def run():
+    print("# fig10: per-bottleneck utilization (paper: baseline 5-6%, "
+          "FuSe 56-100%)")
+    for name, f in zoo.ZOO.items():
+        net = f()
+        base = bottleneck_utilizations(
+            simulate_network(zoo.lower_to_ir(net, "depthwise")))
+        fuse = bottleneck_utilizations(
+            simulate_network(zoo.lower_to_ir(net, "fuse_half")))
+        ub = [d["utilization"] for d in base]
+        uf = [d["utilization"] for d in fuse]
+        emit(f"fig10.{name}", 0,
+             f"baseline mean={sum(ub) / len(ub):.3f} "
+             f"range=[{min(ub):.3f},{max(ub):.3f}] | fuse-half "
+             f"mean={sum(uf) / len(uf):.3f} "
+             f"range=[{min(uf):.3f},{max(uf):.3f}]")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Fig 11: layerwise SRAM/DRAM bandwidth, MobileNetV3-Large."""
+from repro.systolic.simulator import simulate_network
+from repro.vision import zoo
+
+from benchmarks.common import emit
+
+
+def run():
+    print("# fig11: per-layer avg bandwidths (bytes/cycle), MBV3-Large")
+    net = zoo.mobilenet_v3_large()
+    for variant in ("depthwise", "fuse_half"):
+        sim = simulate_network(zoo.lower_to_ir(net, variant))
+        peak_dram = max(l.avg_dram_bw() for l in sim.layers)
+        fuse_layers = [l for l in sim.layers
+                       if l.kind in ("depthwise", "fuse_row", "fuse_col")]
+        other = [l for l in sim.layers
+                 if l.kind not in ("depthwise", "fuse_row", "fuse_col")]
+        mean = lambda xs: sum(xs) / max(len(xs), 1)
+        emit(f"fig11.mbv3l.{variant}", 0,
+             f"spatial_stage sram={mean([l.avg_sram_bw() for l in fuse_layers]):.1f} "
+             f"dram={mean([l.avg_dram_bw() for l in fuse_layers]):.2f} | "
+             f"other sram={mean([l.avg_sram_bw() for l in other]):.1f} "
+             f"dram={mean([l.avg_dram_bw() for l in other]):.2f} | "
+             f"peak_dram={peak_dram:.2f} B/cyc")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Fig 8: network latencies on a 16x16 array (OS / WS baselines vs
+FuSe variants on ST-OS) + layerwise speedup for MobileNetV2 (Fig 8b)."""
+import dataclasses
+
+from repro.systolic.arrays import PAPER_CONFIG
+from repro.systolic.simulator import layerwise_speedup, simulate_network
+from repro.vision import zoo
+
+from benchmarks.common import emit
+
+PAPER_SPEEDUP_HALF = (7.01, 9.36)   # paper's claimed band (OS baseline)
+PAPER_SPEEDUP_FULL = (4.15, 5.05)
+
+
+def run(layerwise: bool = True):
+    print("# fig8a: name,latency_ms per config + speedups vs OS baseline")
+    for name, f in zoo.ZOO.items():
+        net = f()
+        base_os = simulate_network(zoo.lower_to_ir(net, "depthwise"))
+        base_ws = simulate_network(zoo.lower_to_ir(net, "depthwise"),
+                                   baseline_dataflow="WS")
+        half = simulate_network(zoo.lower_to_ir(net, "fuse_half"))
+        full = simulate_network(zoo.lower_to_ir(net, "fuse_full"))
+        emit(f"fig8a.{name}", 0,
+             f"OS={base_os.latency_ms:.2f}ms WS={base_ws.latency_ms:.2f}ms "
+             f"half={half.latency_ms:.2f}ms full={full.latency_ms:.2f}ms "
+             f"speedup_half={base_os.cycles / half.cycles:.2f}x "
+             f"speedup_full={base_os.cycles / full.cycles:.2f}x "
+             f"(paper: {PAPER_SPEEDUP_HALF}/{PAPER_SPEEDUP_FULL})")
+    if layerwise:
+        print("# fig8b: layerwise FuSe-Half speedups, MobileNetV2")
+        net = zoo.mobilenet_v2()
+        base = simulate_network(zoo.lower_to_ir(net, "depthwise"))
+        fuse = simulate_network(zoo.lower_to_ir(net, "fuse_half"))
+        for d in layerwise_speedup(base, fuse):
+            emit(f"fig8b.mbv2.{d['block']}", 0, f"{d['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig 9: (a) operator-wise latency split; (b) array-size scaling."""
+import dataclasses
+
+from repro.systolic.arrays import PAPER_CONFIG
+from repro.systolic.simulator import simulate_network
+from repro.vision import zoo
+
+from benchmarks.common import emit
+
+
+def run():
+    print("# fig9a: operator-wise cycle split")
+    for name, f in zoo.ZOO.items():
+        net = f()
+        for variant in ("depthwise", "fuse_half"):
+            sim = simulate_network(zoo.lower_to_ir(net, variant))
+            split = sim.cycles_by_kind()
+            total = sum(split.values())
+            s = " ".join(f"{k}={v / total:.2f}" for k, v in
+                         sorted(split.items()))
+            emit(f"fig9a.{name}.{variant}", 0, s)
+    print("# fig9b: speedup (FuSe-Half vs OS baseline) vs array size")
+    for name, f in zoo.ZOO.items():
+        net = f()
+        ratios = []
+        for s in (8, 16, 32, 64):
+            cfg = dataclasses.replace(PAPER_CONFIG, rows=s, cols=s)
+            base = simulate_network(zoo.lower_to_ir(net, "depthwise"), cfg)
+            half = simulate_network(zoo.lower_to_ir(net, "fuse_half"), cfg)
+            ratios.append(f"{s}x{s}={base.cycles / half.cycles:.2f}x")
+        emit(f"fig9b.{name}", 0, " ".join(ratios))
+
+
+if __name__ == "__main__":
+    run()

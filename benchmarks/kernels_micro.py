@@ -1,0 +1,38 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU) vs jnp refs.
+
+On this container the kernels execute in interpret mode, so wall-clock is
+NOT TPU-representative; the roofline story lives in benchmarks/roofline.py.
+This harness checks the kernels run end-to-end at benchmark shapes and
+reports us/call for regression tracking.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fuse1d import fuse1d
+from repro.kernels.matmul import matmul
+
+from benchmarks.common import emit, time_call
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    print("# kernels: us/call (interpret-mode CPU; correctness-tracked)")
+    for (n, t, c, k) in [(8, 128, 256, 3), (4, 512, 128, 4)]:
+        x = jax.random.normal(key, (n, t + k - 1, c))
+        w = jax.random.normal(key, (k, c))
+        us_k = time_call(fuse1d, x, w)
+        us_r = time_call(jax.jit(ref.fuse1d_ref), x, w)
+        emit(f"kernel.fuse1d.{n}x{t}x{c}x{k}", f"{us_k:.0f}",
+             f"ref={us_r:.0f}us")
+    for (m, kk, n2) in [(256, 256, 256)]:
+        a = jax.random.normal(key, (m, kk))
+        b = jax.random.normal(key, (kk, n2))
+        us_k = time_call(matmul, a, b)
+        us_r = time_call(jax.jit(ref.matmul_ref), a, b)
+        emit(f"kernel.matmul.{m}x{kk}x{n2}", f"{us_k:.0f}",
+             f"ref={us_r:.0f}us")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report_tables [results/dryrun]
+"""
+import json
+import pathlib
+import sys
+
+ARCH_ORDER = ["mistral_nemo_12b", "minitron_8b", "smollm_135m", "glm4_9b",
+              "recurrentgemma_2b", "qwen3_moe_235b", "deepseek_v2_236b",
+              "llama32_vision_90b", "whisper_tiny", "xlstm_125m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.2f}ms"
+
+
+def main():
+    d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    recs = {}
+    for p in d.glob("*.json"):
+        r = json.loads(p.read_text())
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+        recs[key] = r
+
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "model TF | useful | temp/chip | multi-pod |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "single", ""))
+            if r is None:
+                continue
+            m = recs.get((arch, shape, "multi", ""))
+            multi = "-"
+            if m is not None:
+                multi = ("ok " + f"{m['memory']['temp_bytes'] / 1e9:.1f}GB"
+                         if m["status"] == "ok"
+                         else m["status"])
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | skipped: "
+                      f"{r['reason'][:40]}... | — | — | — | {multi} |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | FAILED | | | | | | | {multi} |")
+                continue
+            rf = r.get("roofline")
+            tmp = f"{r['memory']['temp_bytes'] / 1e9:.1f}GB"
+            if rf is None:
+                print(f"| {arch} | {shape} | | | | | | | {tmp} | {multi} |")
+                continue
+            print(f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+                  f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                  f"{rf['dominant'].replace('_s', '')} | "
+                  f"{rf['model_flops'] / 1e12:.0f} | "
+                  f"{rf['useful_fraction']:.3f} | {tmp} | {multi} |")
+
+    # tagged variants (perf iterations)
+    tags = sorted({k[3] for k in recs if k[3]})
+    if tags:
+        print("\n### Perf-iteration variants\n")
+        print("| cell | tag | compute | memory | collective | dominant | "
+              "useful | temp/chip |")
+        print("|---|---|---|---|---|---|---|---|")
+        for (arch, shape, mesh, tag), r in sorted(recs.items()):
+            if not tag or r["status"] != "ok" or "roofline" not in r:
+                continue
+            rf = r["roofline"]
+            print(f"| {arch}.{shape} | {tag} | {fmt_s(rf['compute_s'])} | "
+                  f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                  f"{rf['dominant'].replace('_s', '')} | "
+                  f"{rf['useful_fraction']:.3f} | "
+                  f"{r['memory']['temp_bytes'] / 1e9:.1f}GB |")
+
+
+if __name__ == "__main__":
+    main()

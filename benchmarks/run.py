@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure + roofline report.
+
+``PYTHONPATH=src python -m benchmarks.run``            — everything
+``PYTHONPATH=src python -m benchmarks.run table3 fig8`` — a subset
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+import sys
+
+from benchmarks import (fig8_latency, fig9_operators, fig10_utilization,
+                        fig11_bandwidth, kernels_micro, roofline,
+                        table2_overheads, table3_macs_params, table4_nas)
+
+SUITES = {
+    "table2": table2_overheads.run,
+    "table3": table3_macs_params.run,
+    "table4": table4_nas.run,
+    "fig8": fig8_latency.run,
+    "fig9": fig9_operators.run,
+    "fig10": fig10_utilization.run,
+    "fig11": fig11_bandwidth.run,
+    "kernels": kernels_micro.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(SUITES)
+    for name in picks:
+        print(f"== {name} ==")
+        SUITES[name]()
+
+
+if __name__ == "__main__":
+    main()

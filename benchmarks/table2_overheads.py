@@ -1,0 +1,16 @@
+"""Paper Table 2: ST-OS VLSI overheads (analytic model vs measured points)."""
+from repro.systolic.arrays import PAPER_TABLE2, stos_overhead_model
+
+from benchmarks.common import emit
+
+
+def run():
+    print("# table2: array_size,model_area%,model_power%,paper_area%,paper_power%")
+    for size, (pa, pp) in PAPER_TABLE2.items():
+        ma, mp = stos_overhead_model(size)
+        emit(f"table2.{size}x{size}", 0,
+             f"model={ma:.2f}%/{mp:.2f}% paper={pa}%/{pp}%")
+
+
+if __name__ == "__main__":
+    run()

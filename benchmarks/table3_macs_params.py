@@ -1,0 +1,23 @@
+"""Paper Table 3: MACs / params of every network x variant, vs paper values."""
+from repro.vision import counting, zoo
+
+from benchmarks.common import emit
+
+
+def run():
+    print("# table3: name,variant,macs_M,params_M,paper_macs_M,paper_params_M,"
+          "params_err_pct")
+    for name, f in zoo.ZOO.items():
+        net = f()
+        for variant in ("depthwise", "fuse_half", "fuse_full"):
+            c = counting.count(net, variant)
+            ref = counting.PAPER_TABLE3.get((name, variant), (None, None))
+            err = (abs(c["params_millions"] - ref[1]) / ref[1] * 100
+                   if ref[1] else float("nan"))
+            emit(f"table3.{name}.{variant}", 0,
+                 f"{c['macs_millions']:.1f}M/{c['params_millions']:.2f}M "
+                 f"paper={ref[0]}M/{ref[1]}M params_err={err:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

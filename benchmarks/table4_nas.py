@@ -1,0 +1,42 @@
+"""Paper Table 4: latency of the NAS-table networks on the 16x16 array.
+
+Reports our simulator's physically-consistent latencies next to the
+paper's, including the MAC-bound feasibility floor that several paper
+numbers violate (EXPERIMENTS.md §Fidelity).
+"""
+from repro.core import search
+from repro.systolic.arrays import PAPER_CONFIG
+from repro.systolic.simulator import simulate_network
+from repro.vision import counting, zoo
+
+from benchmarks.common import emit
+
+PAPER_TABLE4 = {
+    ("mnasnet_b1", "depthwise"): 4.04,
+    ("mnasnet_b1", "fuse_half"): 0.50,
+    ("mobilenet_v3_large", "depthwise"): 3.30,
+    ("mobilenet_v3_large", "fuse_half"): 0.40,
+}
+
+
+def run():
+    print("# table4: name.variant latency_ms (ours) vs paper, + physical floor")
+    for (name, variant), paper_ms in PAPER_TABLE4.items():
+        net = zoo.ZOO[name]()
+        sim = simulate_network(zoo.lower_to_ir(net, variant))
+        macs = counting.count(net, variant)["macs"]
+        floor_ms = macs / PAPER_CONFIG.pes / (PAPER_CONFIG.freq_ghz * 1e9) * 1e3
+        feasible = "OK" if paper_ms >= floor_ms else "paper < MAC floor!"
+        emit(f"table4.{name}.{variant}", 0,
+             f"ours={sim.latency_ms:.2f}ms paper={paper_ms}ms "
+             f"floor={floor_ms:.2f}ms [{feasible}]")
+    print("# table4-hybrid: greedy-50% hybrids (paper's manual baseline)")
+    for name in ("mnasnet_b1", "mobilenet_v3_large"):
+        net = zoo.ZOO[name]()
+        mask = search.greedy_latency_mask(net, 0.5)
+        lat = search.latency_ms(net, mask)
+        emit(f"table4.{name}.hybrid50", 0, f"{lat:.2f}ms mask={mask}")
+
+
+if __name__ == "__main__":
+    run()

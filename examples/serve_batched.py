@@ -1,0 +1,37 @@
+"""Example: batched serving of a small model (prefill + greedy decode).
+
+Builds the smollm-family reduced model, runs a batch of mixed-length
+requests through the ServeEngine (prefill -> aligned decode buffers ->
+jitted decode loop with donated caches), and verifies batching does not
+change any request's output.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+
+import repro.configs as C
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    cfg = C.get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_seq=64, batch_slots=4)
+
+    requests = [
+        Request([1, 2, 3, 4, 5], max_new_tokens=8),
+        Request([42, 7], max_new_tokens=6),
+        Request([9, 9, 9, 9, 9, 9, 9, 9], max_new_tokens=4),
+    ]
+    outs = engine.generate(requests)
+    for r, o in zip(requests, outs):
+        print(f"prompt={r.prompt} -> generated={o}")
+
+    solo = engine.generate([requests[1]])[0]
+    print("batch-independence check:", "OK" if solo == outs[1] else "MISMATCH")
+
+
+if __name__ == "__main__":
+    main()

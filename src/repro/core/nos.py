@@ -1,0 +1,151 @@
+"""Neural Operator Scaffolding (paper §4).
+
+Trains the cheap FuSeConv operator by distilling from the expensive
+depthwise operator *inside the same network*:
+
+  1. start from a trained all-depthwise teacher network;
+  2. build a scaffolded student: every spatial stage holds the teacher
+     kernel + a shared KxK adapter (``variant="scaffold"``);
+  3. each step, every scaffolded layer is randomly realized as depthwise or
+     (adapter-derived) FuSe-Half — OFA-style operator sampling;
+  4. loss = CE + knowledge distillation against the frozen teacher's logits;
+  5. after training, ``collapse`` materializes pure FuSe-Half weights
+     (R_w = A @ T_w[:,mid,:], C_w = A @ T_w[mid,:,:]) and the scaffold is
+     discarded — inference cost is exactly the FuSe-Half network.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fuseconv as fc
+from repro.vision import zoo
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Scaffold construction / collapse.
+# ---------------------------------------------------------------------------
+
+def scaffold_from_teacher(teacher_params: list, net: zoo.NetworkDef) -> list:
+    """Copy a trained all-depthwise network's params into a scaffold student.
+
+    Every spatial stage gains an identity-initialized shared adapter and a
+    runtime ``choice`` scalar (0 = depthwise, 1 = FuSe).
+    """
+    student: list = []
+    for b, p in zip(net.blocks, teacher_params):
+        q = jax.tree_util.tree_map(lambda a: a, p)  # shallow-ish copy
+        if isinstance(b, (zoo.DWSep, zoo.MBConv)):
+            dw = p["sp"]["dw"]
+            k = dw.shape[0]
+            q = dict(q)
+            q["sp"] = {"dw": dw, "adapter": jnp.eye(k, dtype=dw.dtype),
+                       "choice": jnp.zeros((), dw.dtype)}
+        student.append(q)
+    return student
+
+
+def set_choices(params: list, net: zoo.NetworkDef, choices: Array) -> list:
+    """choices: (num_spatial_stages,) in [0,1]."""
+    out: list = []
+    vi = 0
+    for b, p in zip(net.blocks, params):
+        if isinstance(b, (zoo.DWSep, zoo.MBConv)):
+            q = dict(p)
+            q["sp"] = dict(p["sp"])
+            q["sp"]["choice"] = choices[vi].astype(p["sp"]["dw"].dtype)
+            vi += 1
+            out.append(q)
+        else:
+            out.append(p)
+    return out
+
+
+def collapse(params: list, net: zoo.NetworkDef,
+             keep_depthwise: Optional[Sequence[bool]] = None) -> tuple:
+    """Materialize deployable params from a trained scaffold.
+
+    Returns (params, variant_list).  ``keep_depthwise[i]=True`` keeps stage i
+    as depthwise (hybrid networks, paper §4.2); default collapses every
+    stage to FuSe-Half.
+    """
+    out: list = []
+    variants: List[str] = []
+    vi = 0
+    for b, p in zip(net.blocks, params):
+        if isinstance(b, (zoo.DWSep, zoo.MBConv)):
+            keep = bool(keep_depthwise[vi]) if keep_depthwise is not None else False
+            q = dict(p)
+            if keep:
+                q["sp"] = {"dw": p["sp"]["dw"]}
+                variants.append("depthwise")
+            else:
+                q["sp"] = fc.derive_fuse_from_teacher(
+                    p["sp"]["dw"], p["sp"]["adapter"], "fuse_half")
+                variants.append("fuse_half")
+            vi += 1
+            out.append(q)
+        else:
+            out.append(p)
+    return out, variants
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, labels: Array,
+                  label_smoothing: float = 0.0) -> Array:
+    n = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, n)
+    if label_smoothing > 0:
+        onehot = onehot * (1 - label_smoothing) + label_smoothing / n
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def kd_loss(student_logits: Array, teacher_logits: Array,
+            temperature: float = 2.0) -> Array:
+    """Hinton et al. soft-label distillation (paper §4.1 uses logit KD)."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits / t)
+    logp_s = jax.nn.log_softmax(student_logits / t)
+    return -jnp.mean(jnp.sum(p_t * logp_s, axis=-1)) * t * t
+
+
+# ---------------------------------------------------------------------------
+# One NOS training step (functional; optimizer supplied by repro.optim).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NOSConfig:
+    kd_alpha: float = 1.0
+    kd_temperature: float = 2.0
+    label_smoothing: float = 0.1
+    fuse_prob: float = 0.5       # per-layer per-step P(realize as FuSe)
+
+
+def nos_loss_fn(student_params: list, net: zoo.NetworkDef, teacher_params: list,
+                batch: dict, choices: Array, cfg: NOSConfig):
+    """Returns (loss, (new_bn_state, metrics)).  Teacher is frozen."""
+    sp = set_choices(student_params, net, choices)
+    n_stages = net.num_spatial_stages
+    s_logits, new_state = zoo.apply_network(
+        sp, net, batch["image"], ["scaffold"] * n_stages, train=True)
+    t_logits, _ = zoo.apply_network(
+        teacher_params, net, batch["image"], "depthwise", train=False)
+    t_logits = jax.lax.stop_gradient(t_logits)
+    ce = cross_entropy(s_logits, batch["label"], cfg.label_smoothing)
+    kd = kd_loss(s_logits, t_logits, cfg.kd_temperature)
+    loss = ce + cfg.kd_alpha * kd
+    acc = jnp.mean(jnp.argmax(s_logits, -1) == batch["label"])
+    return loss, (new_state, {"loss": loss, "ce": ce, "kd": kd, "acc": acc})
+
+
+def sample_choices(key: Array, n_stages: int, fuse_prob: float) -> Array:
+    return jax.random.bernoulli(key, fuse_prob, (n_stages,)).astype(jnp.float32)

@@ -1,0 +1,124 @@
+"""Once-For-All-style elastic training combined with NOS (paper §4.2, Fig 15).
+
+The paper plugs the FuSeConv operator choice into OFA's progressive-
+shrinking design space (elastic kernel / depth / width) and "scaffolds
+adapter matrices across kernel sizes".  We implement the two dimensions the
+paper's §6.5 results hinge on, at container scale:
+
+  * elastic kernel: the spatial stage stores its max-K depthwise kernel;
+    smaller kernels are derived OFA-style by center-crop + a learned
+    (k'^2 x k'^2) transform matrix shared across channels — the same
+    adapter mechanism NOS uses, extended across kernel sizes;
+  * elastic operator: every (stage, kernel) choice can additionally be
+    realized as FuSe-Half via the NOS adapter of that kernel size;
+  * elastic depth: residual-compatible blocks (stride 1, cin == cout) carry
+    a runtime skip gate.
+
+``sample_subnet`` draws a configuration; ``subnet_choices`` realizes it on
+a scaffolded parameter tree.  Progressive shrinking = schedule over the
+sampling space (kernels first, then depth, then operators).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fuseconv as fc
+from repro.vision import zoo
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSpace:
+    kernels: tuple = (7, 5, 3)
+    elastic_depth: bool = True
+    allow_fuse: bool = True
+
+
+def kernel_transforms(max_k: int, kernels: Sequence[int], dtype=jnp.float32
+                      ) -> dict:
+    """Identity-initialized crop transforms {k: (k^2, k^2)} for k < max_k."""
+    return {int(k): jnp.eye(k * k, dtype=dtype)
+            for k in kernels if k < max_k}
+
+
+def crop_kernel(dw: Array, k: int, transform: Optional[Array]) -> Array:
+    """Center-crop a (K,K,C) kernel to (k,k,C), then linear-transform."""
+    big = dw.shape[0]
+    off = (big - k) // 2
+    w = dw[off:off + k, off:off + k, :]
+    if transform is not None:
+        c = w.shape[-1]
+        w = (transform @ w.reshape(k * k, c)).reshape(k, k, c)
+    return w
+
+
+def elastic_spatial_apply(params: dict, x: Array, *, stride: int,
+                          kernel_choice: Array, fuse_choice: Array,
+                          kernels: Sequence[int]) -> Array:
+    """Runtime-selectable (kernel, operator) spatial stage.
+
+    params: {dw: (K,K,C) max kernel, kt: {k: transform}, adapter: {k: (k,k)}}
+    kernel_choice: int32 index into ``kernels``; fuse_choice: {0,1} float.
+    All branches are traced once; selection is data-dependent (jit-stable).
+    """
+    ys = []
+    for k in kernels:
+        tr = params["kt"].get(int(k)) if int(k) < params["dw"].shape[0] else None
+        dw_k = crop_kernel(params["dw"], int(k), tr)
+        y_dw = fc.depthwise_conv2d(x, dw_k, stride=stride)
+        derived = fc.derive_fuse_from_teacher(dw_k, params["adapter"][int(k)],
+                                              "fuse_half")
+        y_fu = fc.fuse_conv2d_half(x, derived["row"], derived["col"],
+                                   stride=stride)
+        f = fuse_choice.astype(y_dw.dtype)
+        ys.append(f * y_fu + (1.0 - f) * y_dw)
+    stacked = jnp.stack(ys)                      # (num_kernels, ...)
+    sel = jax.nn.one_hot(kernel_choice, len(kernels), dtype=stacked.dtype)
+    return jnp.einsum("s,s...->...", sel, stacked)
+
+
+def init_elastic_stage(key: Array, max_k: int, c: int,
+                       space: ElasticSpace, dtype=jnp.float32) -> dict:
+    import numpy as np
+    ks = [k for k in space.kernels if k <= max_k]
+    scale = float(np.sqrt(2.0 / (max_k * max_k)))
+    return {
+        "dw": jax.random.normal(key, (max_k, max_k, c), dtype) * scale,
+        "kt": kernel_transforms(max_k, ks, dtype),
+        "adapter": {int(k): jnp.eye(k, dtype=dtype) for k in ks},
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class SubnetChoice:
+    kernels: List[int]        # per spatial stage
+    fuse: List[bool]          # per spatial stage
+    skip: List[bool]          # per skippable block
+
+
+def sample_subnet(key: Array, n_stages: int, n_skippable: int,
+                  space: ElasticSpace, *, phase: str = "full") -> SubnetChoice:
+    """Progressive-shrinking phases: 'kernel' -> 'depth' -> 'full'."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    ks = list(space.kernels)
+    kern = [ks[int(i)] for i in
+            jax.random.randint(k1, (n_stages,), 0, len(ks))]
+    if phase == "kernel":
+        fuse = [False] * n_stages
+        skip = [False] * n_skippable
+    elif phase == "depth":
+        fuse = [False] * n_stages
+        skip = [bool(b) for b in
+                jax.random.bernoulli(k2, 0.25, (n_skippable,))]
+    else:
+        fuse = ([bool(b) for b in
+                 jax.random.bernoulli(k3, 0.5, (n_stages,))]
+                if space.allow_fuse else [False] * n_stages)
+        skip = [bool(b) for b in
+                jax.random.bernoulli(k2, 0.25, (n_skippable,))]
+    return SubnetChoice(kern, fuse, skip)

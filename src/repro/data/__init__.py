@@ -1,0 +1,3 @@
+from repro.data.vision_synth import synth_image_batch, SynthVisionConfig  # noqa: F401
+from repro.data.tokens import TokenPipeline, TokenConfig  # noqa: F401
+from repro.data.prefetch import Prefetcher  # noqa: F401

@@ -1,0 +1,91 @@
+"""jit'd model-facing wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (Python
+semantics, bit-equivalent block schedule); on TPU pass ``interpret=False``
+(wired through ``repro.launch`` config).  The wrappers own layout plumbing:
+padding, chunking long sequences into VMEM-sized tiles, and the 2-D
+row/column transposes that reduce FuSe-2D to the fuse1d primitive.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fuse1d as _fuse1d
+from repro.kernels import matmul as _matmul
+
+# Chunk length for the fuse1d T axis: keeps (Tc+K-1, 128) fp32 tiles ~4 MB.
+MAX_T_CHUNK = 8192
+
+
+def fuse_conv1d_temporal(x: jax.Array, w: jax.Array, *, causal: bool = True,
+                         interpret: bool = True,
+                         block_c: int = _fuse1d.DEFAULT_BLOCK_C) -> jax.Array:
+    """Depthwise temporal conv via the fuse1d kernel.  x: (B,T,C), w: (K,C)."""
+    b, t, c = x.shape
+    k = w.shape[0]
+    pad = (k - 1, 0) if causal else ((k - 1) // 2, k - (k - 1) // 2 - 1)
+    x_pad = jnp.pad(x, ((0, 0), pad, (0, 0)))
+    if t <= MAX_T_CHUNK:
+        return _fuse1d.fuse1d(x_pad, w, block_c=block_c, interpret=interpret)
+    # Split long sequences into overlapping chunks folded into the N axis.
+    n_chunks = -(-t // MAX_T_CHUNK)
+    t_pad = n_chunks * MAX_T_CHUNK - t
+    x_pad = jnp.pad(x_pad, ((0, 0), (0, t_pad), (0, 0)))
+    starts = jnp.arange(n_chunks) * MAX_T_CHUNK
+    chunks = jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(x_pad, s, MAX_T_CHUNK + k - 1,
+                                               axis=1),
+        out_axes=1)(starts)                      # (B, n_chunks, Tc+K-1, C)
+    chunks = chunks.reshape(b * n_chunks, MAX_T_CHUNK + k - 1, c)
+    y = _fuse1d.fuse1d(chunks, w, block_c=block_c, interpret=interpret)
+    y = y.reshape(b, n_chunks * MAX_T_CHUNK, c)
+    return y[:, :t, :]
+
+
+def fuse_conv2d_rows(x: jax.Array, w_row: jax.Array, *, stride: int = 1,
+                     interpret: bool = True) -> jax.Array:
+    """Kx1 (vertical) bank via fuse1d.  x: (B,H,W,C), w_row: (K,C)."""
+    b, h, wdim, c = x.shape
+    # conv along H: fold W into the problem axis -> (B*W, H, C)
+    xt = x.transpose(0, 2, 1, 3).reshape(b * wdim, h, c)
+    k = w_row.shape[0]
+    lo = (k - 1) // 2
+    x_pad = jnp.pad(xt, ((0, 0), (lo, k - 1 - lo), (0, 0)))
+    y = _fuse1d.fuse1d(x_pad, w_row, interpret=interpret)     # (B*W, H, C)
+    y = y.reshape(b, wdim, h, c).transpose(0, 2, 1, 3)
+    return y[:, ::stride, ::stride, :] if stride > 1 else y
+
+
+def fuse_conv2d_cols(x: jax.Array, w_col: jax.Array, *, stride: int = 1,
+                     interpret: bool = True) -> jax.Array:
+    """1xK (horizontal) bank via fuse1d.  x: (B,H,W,C), w_col: (K,C)."""
+    b, h, wdim, c = x.shape
+    xt = x.reshape(b * h, wdim, c)
+    k = w_col.shape[0]
+    lo = (k - 1) // 2
+    x_pad = jnp.pad(xt, ((0, 0), (lo, k - 1 - lo), (0, 0)))
+    y = _fuse1d.fuse1d(x_pad, w_col, interpret=interpret)
+    y = y.reshape(b, h, wdim, c)
+    return y[:, ::stride, ::stride, :] if stride > 1 else y
+
+
+def fuse_conv2d_half(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
+                     stride: int = 1, interpret: bool = True) -> jax.Array:
+    c_r = w_row.shape[-1]
+    y_r = fuse_conv2d_rows(x[..., :c_r], w_row, stride=stride,
+                           interpret=interpret)
+    y_c = fuse_conv2d_cols(x[..., c_r:], w_col, stride=stride,
+                           interpret=interpret)
+    return jnp.concatenate([y_r, y_c], axis=-1)
+
+
+def pointwise(x: jax.Array, w: jax.Array, *, interpret: bool = True
+              ) -> jax.Array:
+    """1x1 conv via the MXU matmul kernel.  x: (..., Cin), w: (Cin, Cout)."""
+    lead = x.shape[:-1]
+    y = _matmul.matmul(x.reshape(-1, x.shape[-1]), w, interpret=interpret)
+    return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fuse1d_ref(x_pad: jax.Array, w: jax.Array) -> jax.Array:
+    """y[n,t,c] = sum_k x_pad[n,t+k,c] * w[k,c].  x_pad: (N, T+K-1, C)."""
+    k = w.shape[0]
+    t = x_pad.shape[1] - k + 1
+    acc = jnp.zeros((x_pad.shape[0], t, x_pad.shape[2]), jnp.float32)
+    for tap in range(k):
+        acc = acc + x_pad[:, tap:tap + t, :].astype(jnp.float32) * \
+            w[tap].astype(jnp.float32)[None, None, :]
+    return acc.astype(x_pad.dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,445 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e): lower + compile every
+(architecture x input-shape) cell on the production mesh and extract the
+roofline terms from compiled artifacts.
+
+Per single-pod cell this runs:
+  1. the PRODUCTION program (scan-over-layers + remat) — proves the
+     sharding compiles and yields the true per-device memory picture;
+  2. two small DEPTH-PROBE programs (1 and 2 repeats of the main
+     superblock, with layer scans and attention chunk-scans unrolled) —
+     XLA cost analysis counts while bodies once (measured; DESIGN.md §6),
+     so FLOPs/bytes/collective-bytes are extracted from the probes and
+     extrapolated linearly in depth, which is exact because every repeat
+     of a superblock executes identical shapes;
+  3. closed-form corrections for the only remaining while loops (xLSTM
+     time recurrences, repro.launch.flopcount).
+
+Multi-pod cells run step 1 only (the roofline table is single-pod by
+assignment).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.launch import mesh as mesh_lib
+from repro.launch.flopcount import time_scan_correction
+from repro.launch.sharding import ShardingPolicy
+from repro.launch.steps import (default_microbatches, default_optimizer,
+                                make_train_step, train_step_shardings)
+from repro.models import stack as stack_lib
+from repro.models.model import build_model
+
+# -- TPU v5e hardware constants (roofline denominators) -----------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extras_shapes(cfg, batch):
+    ex = {}
+    if cfg.num_vision_tokens:
+        ex["vision_embeds"] = _sds((batch, cfg.num_vision_tokens,
+                                    cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.encoder_layers:
+        ex["memory_embeds"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    return ex
+
+
+def shape_applicable(cfg, shape_name: str) -> tuple:
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch: no decode step"
+    if shape_name == "long_500k" and not cfg.supports_long:
+        return False, ("full-attention arch: 512k dense decode is "
+                       "quadratic-cost by construction (DESIGN.md §4)")
+    return True, ""
+
+
+# -----------------------------------------------------------------------------
+# Collective-byte extraction from optimized HLO.
+# -----------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"= *(\(?[^=()]*(?:\([^()]*\))?[^=()]*\)?) *"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes_by_kind": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# -----------------------------------------------------------------------------
+# Cell construction.
+# -----------------------------------------------------------------------------
+
+def build_cell(cfg, shape_name: str, mesh, *, microbatches: int = 0,
+               profile: str = "tp", attn_align: bool = True,
+               zero_opt: bool = False, zero3: bool = False):
+    sh = SHAPES[shape_name]
+    model = build_model(cfg)
+    policy = ShardingPolicy(mesh, cfg, profile, attn_align, zero3)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ns = lambda s: NamedSharding(mesh, s)
+
+    params_shape = jax.eval_shape(model.init, _sds((2,), jnp.uint32))
+    if sh["kind"] == "train":
+        opt = default_optimizer(cfg)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        n_micro = microbatches or default_microbatches(
+            cfg, sh["batch"], sh["seq"], n_chips)
+        mb = sh["batch"] // n_micro
+        batch = {"tokens": _sds((n_micro, mb, sh["seq"]), jnp.int32),
+                 "labels": _sds((n_micro, mb, sh["seq"]), jnp.int32)}
+        for k, v in _extras_shapes(cfg, mb).items():
+            batch[k] = _sds((n_micro,) + v.shape, v.dtype)
+        fn = make_train_step(model, policy, n_micro, opt,
+                             unroll_micro=cfg.scan_unroll)
+        in_sh, out_sh = train_step_shardings(policy, params_shape, batch,
+                                             zero_opt=zero_opt)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, _sds((), jnp.int32), batch)
+        meta = {"n_micro": n_micro, "micro_batch": mb}
+    elif sh["kind"] == "prefill":
+        extras = _extras_shapes(cfg, sh["batch"])
+
+        def fn(params, tokens, extras):
+            return model.prefill(params, tokens, extras,
+                                 shard_act=policy.act_constraint)
+
+        pspecs = jax.tree_util.tree_map(ns, policy.param_specs(params_shape))
+        tok_spec = ns(P(*policy.batch_spec(sh["batch"]), None))
+        ex_specs = jax.tree_util.tree_map(
+            lambda l: ns(P(*policy.batch_spec(l.shape[0]),
+                           *([None] * (l.ndim - 1)))), extras)
+        jitted = jax.jit(fn, in_shardings=(pspecs, tok_spec, ex_specs))
+        args = (params_shape, _sds((sh["batch"], sh["seq"]), jnp.int32),
+                extras)
+        meta = {}
+    else:  # decode
+        extras = {}
+        if cfg.num_vision_tokens:
+            extras["memory_len"] = cfg.num_vision_tokens
+        if cfg.encoder_layers:
+            extras["memory_len"] = cfg.encoder_seq
+
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(sh["batch"], sh["seq"], extras))
+
+        def fn(params, token, cache):
+            return model.decode_step(params, token, cache, extras,
+                                     shard_act=policy.act_constraint)
+
+        pspecs = jax.tree_util.tree_map(ns, policy.param_specs(params_shape))
+        cspecs = policy.cache_shardings(cache_shape, sh["batch"])
+        tok_spec = ns(P(*policy.batch_spec(sh["batch"])))
+        jitted = jax.jit(fn, in_shardings=(pspecs, tok_spec, cspecs),
+                         out_shardings=(None, cspecs),
+                         donate_argnums=(2,))
+        args = (params_shape, _sds((sh["batch"],), jnp.int32), cache_shape)
+        meta = {}
+    return jitted, args, meta, n_chips
+
+
+def _compile_costs(cfg, shape_name, mesh, microbatches, profile="tp",
+                   attn_align=True, zero_opt=False):
+    """Compile one program and return (flops, bytes, collectives dict)."""
+    jitted, args, _, _ = build_cell(cfg, shape_name, mesh,
+                                    microbatches=microbatches,
+                                    profile=profile, attn_align=attn_align,
+                                    zero_opt=zero_opt)
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def probe_depths(cfg):
+    """(L_a, L_b, main_repeats): probe layer counts for depth extrapolation."""
+    segs = stack_lib.plan_segments(cfg)
+    main = max(segs, key=lambda s: s.repeats)
+    unit = len(main.kinds)
+    l_a = cfg.num_layers - (main.repeats - 1) * unit
+    return l_a, l_a + unit, main.repeats
+
+
+def probe_costs(cfg, shape_name, mesh, microbatches, profile="tp",
+                attn_align=True, zero_opt=False):
+    """Depth-probe extrapolated (flops, bytes, collectives) per device."""
+    l_a, l_b, reps = probe_depths(cfg)
+    # larger attention chunks keep chunk-loop unrolling tractable at 32k;
+    # the einsum FLOP totals are chunking-invariant.
+    probe_kw = dict(scan_unroll=True, attn_q_chunk=4096, attn_kv_chunk=8192)
+    cfg_a = dataclasses.replace(cfg, num_layers=l_a, **probe_kw)
+    cfg_b = dataclasses.replace(cfg, num_layers=l_b, **probe_kw)
+    fa, ba, ca = _compile_costs(cfg_a, shape_name, mesh, microbatches,
+                                profile, attn_align, zero_opt)
+    fb, bb, cb = _compile_costs(cfg_b, shape_name, mesh, microbatches,
+                                profile, attn_align, zero_opt)
+    r = reps - 1
+    flops = fa + r * (fb - fa)
+    bytes_ = ba + r * (bb - ba)
+    coll = {"bytes_by_kind": {
+        k: ca["bytes_by_kind"][k] + r * (cb["bytes_by_kind"][k] -
+                                         ca["bytes_by_kind"][k])
+        for k in ca["bytes_by_kind"]},
+        "counts": {k: ca["counts"][k] + r * (cb["counts"][k] -
+                                             ca["counts"][k])
+                   for k in ca["counts"]}}
+    coll["total_bytes"] = sum(coll["bytes_by_kind"].values())
+    return flops, bytes_, coll, {"L_a": l_a, "L_b": l_b, "repeats": reps,
+                                 "probe_flops": [fa, fb]}
+
+
+# -----------------------------------------------------------------------------
+# Roofline terms.
+# -----------------------------------------------------------------------------
+
+def roofline(flops, bytes_acc, coll, n_chips, cfg, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    correction = time_scan_correction(
+        cfg, sh["kind"], sh["batch"],
+        sh["seq"] if sh["kind"] != "decode" else 1)
+    flops = flops + correction / n_chips
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    n_active = cfg.active_param_count()
+    if sh["kind"] == "train":
+        model_flops = 6 * n_active * sh["batch"] * sh["seq"]
+    elif sh["kind"] == "prefill":
+        model_flops = 2 * n_active * sh["batch"] * sh["seq"]
+    else:
+        model_flops = 2 * n_active * sh["batch"]
+    hlo_total = flops * n_chips
+    return {
+        **terms,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "hlo_flops_per_chip": flops,
+        "hlo_flops_total": hlo_total,
+        "useful_fraction": (model_flops / hlo_total) if hlo_total else None,
+        "bytes_accessed_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll["total_bytes"],
+        "time_scan_correction_flops": correction,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, out_dir: str,
+             microbatches: int = 0, save_hlo: bool = False,
+             tag: str = "", skip_probes: bool = False, profile: str = "tp",
+             overrides: dict = None, attn_align: bool = True,
+             zero_opt: bool = False, zero3: bool = False) -> dict:
+    cfg = C.get_config(arch)
+    if overrides:
+        if "capacity_factor" in overrides and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=overrides["capacity_factor"]))
+        if "group_size" in overrides and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, group_size=int(overrides["group_size"])))
+        for k in ("attn_q_chunk", "attn_kv_chunk", "remat"):
+            if k in overrides:
+                cfg = dataclasses.replace(cfg, **{k: overrides[k]})
+    ok, why = shape_applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    if SHAPES[shape_name]["kind"] == "train" and not microbatches:
+        microbatches = default_microbatches(
+            cfg, SHAPES[shape_name]["batch"], SHAPES[shape_name]["seq"],
+            n_chips)
+    t0 = time.time()
+    try:
+        # 1. production program: sharding verdict + memory picture
+        jitted, args, meta, _ = build_cell(cfg, shape_name, mesh,
+                                           microbatches=microbatches,
+                                           profile=profile,
+                                           attn_align=attn_align,
+                                           zero_opt=zero_opt, zero3=zero3)
+        with mesh:
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        sched = collective_bytes(hlo)   # counted-once schedule info
+        rec.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "compile_s": round(time.time() - t0, 1),
+            "meta": meta,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "collective_schedule": sched,
+        })
+        if save_hlo:
+            (pathlib.Path(out_dir) /
+             f"{arch}.{shape_name}.{mesh_kind}.hlo").write_text(hlo)
+        # 2+3. depth probes (single-pod roofline only)
+        if mesh_kind == "single" and not skip_probes:
+            t1 = time.time()
+            flops, bytes_, coll, pinfo = probe_costs(cfg, shape_name, mesh,
+                                                     microbatches, profile,
+                                                     attn_align, zero_opt)
+            rec["probe"] = pinfo
+            rec["probe_s"] = round(time.time() - t1, 1)
+            rec["collectives"] = coll
+            rec["roofline"] = roofline(flops, bytes_, coll, n_chips, cfg,
+                                       shape_name)
+    except Exception as e:
+        rec.update({"status": "failed", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--profile", default="tp",
+                    choices=["tp", "fsdp", "tp_seq"])
+    ap.add_argument("--cap-factor", type=float, default=0)
+    ap.add_argument("--group-size", type=int, default=0)
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--kv-chunk", type=int, default=0)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-attn-align", action="store_true",
+                    help="naive baseline attention sharding")
+    ap.add_argument("--zero-opt", action="store_true",
+                    help="ZeRO-shard optimizer state over 'data' too")
+    ap.add_argument("--zero3", action="store_true",
+                    help="ZeRO-3: 2-D (model x data) weight sharding")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = C.list_configs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                stem = f"{arch}.{shape}.{mk}" + (f".{args.tag}" if args.tag
+                                                 else "")
+                path = out_dir / f"{stem}.json"
+                if path.exists() and not args.force:
+                    print(f"[cached] {stem}", flush=True)
+                    continue
+                print(f"[run] {stem} ...", flush=True)
+                overrides = {}
+                if args.cap_factor:
+                    overrides["capacity_factor"] = args.cap_factor
+                if args.group_size:
+                    overrides["group_size"] = args.group_size
+                if args.q_chunk:
+                    overrides["attn_q_chunk"] = args.q_chunk
+                if args.kv_chunk:
+                    overrides["attn_kv_chunk"] = args.kv_chunk
+                if args.no_remat:
+                    overrides["remat"] = False
+                rec = run_cell(arch, shape, mk, out_dir=str(out_dir),
+                               microbatches=args.microbatches,
+                               save_hlo=args.save_hlo, tag=args.tag,
+                               skip_probes=args.skip_probes,
+                               profile=args.profile, overrides=overrides,
+                               attn_align=not args.no_attn_align,
+                               zero_opt=args.zero_opt, zero3=args.zero3)
+                path.write_text(json.dumps(rec, indent=2))
+                status = rec["status"]
+                extra = (rec.get("reason") or rec.get("error") or
+                         f"compile {rec.get('compile_s')}s "
+                         f"probes {rec.get('probe_s')}s "
+                         f"dom={rec.get('roofline', {}).get('dominant')}")
+                print(f"[{status}] {stem}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Analytic FLOP corrections for while-loops that cannot be unrolled.
+
+The dry-run probes unroll layer scans and attention chunk scans so XLA's
+cost analysis counts them exactly (DESIGN.md §6).  The one remaining
+while-loop family is the *time* recurrence of the xLSTM cells (mLSTM /
+sLSTM) — 4k-500k sequential steps cannot be unrolled, and XLA counts the
+body once.  These closed forms add the missing (T-1)/T fraction.  RG-LRU
+uses ``associative_scan`` (log-depth, fully materialized in HLO) and needs
+no correction.
+"""
+from __future__ import annotations
+
+from repro.models.config import ArchConfig
+
+
+def _mlstm_cell_flops_per_token(cfg: ArchConfig) -> float:
+    h = (cfg.recurrent.heads or cfg.num_heads) if cfg.recurrent else cfg.num_heads
+    di = 2 * cfg.d_model
+    dh = di // h
+    # C update (f*C + i*(k (x) v)): 3*H*dh^2 ; n update: 3*H*dh ;
+    # output q^T C: 2*H*dh^2 ; denominator q.n: 2*H*dh ; misc gates ~ 10*H
+    return 5.0 * h * dh * dh + 5.0 * h * dh + 10 * h
+
+
+def _slstm_cell_flops_per_token(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    h = (cfg.recurrent.heads or cfg.num_heads) if cfg.recurrent else cfg.num_heads
+    # recurrent block-diagonal gates: 4 gates x D x (D/h) MACs
+    return 8.0 * d * d / h + 30.0 * d
+
+
+def _xm_block_params(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    di = 2 * d
+    return d * 2 * di + 3 * di * di + di * d + di * cfg.recurrent.conv_width
+
+
+def _xs_block_params(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    h = (cfg.recurrent.heads or cfg.num_heads) if cfg.recurrent else 1
+    return 4 * d * d + 4 * d * (d // h) + 3 * d * (4 * d // 3)
+
+
+def time_scan_correction(cfg: ArchConfig, kind: str, batch: int, seq: int
+                         ) -> float:
+    """Missing FLOPs for one forward pass over (batch, seq) tokens.
+
+    ``kind``: 'train' multiplies by 4 (fwd + remat-recompute + 2x bwd),
+    'prefill' by 1.  Decode steps have trip-count 1 — no correction.
+    For training, only the recurrent CELL lives inside the time scan (the
+    projections are batched outside); for prefill the xm/xs layers run
+    entirely through per-token decode steps (stack.layer_prefill), so the
+    correction covers the whole block (2 x block-params per token + cell).
+    """
+    pattern = cfg.layer_pattern
+    n_xm = sum(1 for k in pattern if k == "xm")
+    n_xs = sum(1 for k in pattern if k == "xs")
+    if n_xm == 0 and n_xs == 0:
+        return 0.0
+    cell = (n_xm * _mlstm_cell_flops_per_token(cfg) +
+            n_xs * _slstm_cell_flops_per_token(cfg))
+    if kind == "train":
+        return cell * batch * seq * 4.0
+    proj = 2.0 * (n_xm * _xm_block_params(cfg) +
+                  n_xs * _xs_block_params(cfg))
+    return (cell + proj) * batch * seq

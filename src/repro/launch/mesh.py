@@ -1,0 +1,27 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+Functions only — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the real local device (CPU smoke paths)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global batch is sharded over (pod acts as outer data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

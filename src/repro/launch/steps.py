@@ -1,0 +1,147 @@
+"""Distributed step builders: train_step (grad-accumulation microbatching),
+prefill_step, decode_step — jitted with explicit in/out shardings.
+
+These are shared by the real trainer/server and by the dry-run driver
+(which lowers them against ShapeDtypeStructs on the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import ShardingPolicy
+from repro.models.config import ArchConfig
+from repro.models.model import LanguageModel
+from repro.optim import adamw, apply_updates, clip_by_global_norm, warmup_cosine
+
+PyTree = Any
+
+
+def default_optimizer(cfg: ArchConfig):
+    sched = warmup_cosine(3e-4, 200, 10_000, min_lr=3e-5)
+    return adamw(sched, b1=0.9, b2=0.95, weight_decay=0.1)
+
+
+def default_microbatches(cfg: ArchConfig, global_batch: int, seq: int,
+                         n_chips: int) -> int:
+    """Pick grad-accumulation depth so per-chip live activations stay sane.
+
+    Heuristic: target <= ~2^21 (2M) tokens x d_model bf16 bytes per chip of
+    saved residuals across the depth; large models need more splits.
+    """
+    tokens_per_chip = global_batch * seq / max(n_chips, 1)
+    n_super = cfg.num_layers
+    bytes_per_chip = tokens_per_chip * cfg.d_model * 2 * max(n_super, 1)
+    budget = 4e9                      # ~4 GB of checkpointed residuals
+    n = 1
+    while bytes_per_chip / n > budget and n < global_batch:
+        n *= 2
+    while global_batch % n != 0:
+        n //= 2
+    return max(n, 1)
+
+
+def make_train_step(model: LanguageModel, policy: ShardingPolicy,
+                    n_micro: int, optimizer=None,
+                    unroll_micro: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, step, batch) -> (params,
+    opt_state, metrics).  ``batch`` leaves are (n_micro, mb, ...).
+    ``unroll_micro`` unrolls the accumulation scan (dry-run probes)."""
+    opt = optimizer or default_optimizer(model.cfg)
+
+    def train_step(params, opt_state, step, batch):
+        def micro_loss(p, mb):
+            return model.loss(p, mb, shard_act=policy.act_constraint)
+
+        grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+        if n_micro == 1:
+            # direct path: no fp32 accumulator tree (saves params-sized
+            # fp32 HBM and avoids per-microbatch gradient reductions)
+            mb = jax.tree_util.tree_map(lambda a: a[0], batch)
+            (loss_sum, _metrics), grads = grad_fn(params, mb)
+        else:
+            def body(carry, mb):
+                gsum, loss_sum = carry
+                (loss, _metrics), g = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g_: a + g_.astype(jnp.float32), gsum, g)
+                return (gsum, loss_sum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(())), batch,
+                unroll=n_micro if unroll_micro else 1)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss_sum / n_micro, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def zero_extend(policy: ShardingPolicy, spec, leaf):
+    """ZeRO: additionally shard optimizer state over 'data' on the first
+    divisible dim not already sharded.  No-op when the param spec already
+    uses 'data' (zero3 2-D weights)."""
+    dsz = policy.mesh.shape["data"]
+    parts = list(spec) + [None] * (leaf.ndim - len(spec))
+    if "data" in parts:
+        from jax.sharding import PartitionSpec as _P
+        return _P(*parts)
+    for i, (dim, s) in enumerate(zip(leaf.shape, parts)):
+        if s is None and dim % dsz == 0 and dim >= dsz:
+            parts[i] = "data"
+            break
+    from jax.sharding import PartitionSpec as _P
+    return _P(*parts)
+
+
+def train_step_shardings(policy: ShardingPolicy, params_shape: PyTree,
+                         batch_shape: PyTree, zero_opt: bool = False):
+    mesh = policy.mesh
+    ns = lambda s: NamedSharding(mesh, s)
+    raw_pspecs = policy.param_specs(params_shape)
+    pspecs = jax.tree_util.tree_map(ns, raw_pspecs)
+    if zero_opt:
+        osp = jax.tree_util.tree_map(
+            lambda sp, l: ns(zero_extend(policy, sp, l)),
+            raw_pspecs, params_shape)
+        ospecs = {"m": osp, "v": osp}
+    else:
+        ospecs = {"m": pspecs, "v": pspecs}
+
+    def batch_one(leaf):
+        # leaves are (n_micro, mb, ...): micro axis unsharded
+        mb = leaf.shape[1]
+        base = policy.batch_spec(mb)
+        return ns(P(None, *(list(base) + [None] * (leaf.ndim - 2))))
+
+    bspecs = jax.tree_util.tree_map(batch_one, batch_shape)
+    in_sh = (pspecs, ospecs, ns(P()), bspecs)
+    out_sh = (pspecs, ospecs, ns(P()))
+    return in_sh, out_sh
+
+
+def make_prefill_step(model: LanguageModel, policy: ShardingPolicy
+                      ) -> Callable:
+    def prefill_step(params, tokens, extras):
+        return model.prefill(params, tokens, extras,
+                             shard_act=policy.act_constraint)
+    return prefill_step
+
+
+def make_decode_step(model: LanguageModel, policy: ShardingPolicy
+                     ) -> Callable:
+    def decode_step(params, token, cache, extras):
+        return model.decode_step(params, token, cache, extras,
+                                 shard_act=policy.act_constraint)
+    return decode_step

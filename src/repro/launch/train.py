@@ -1,0 +1,63 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+      --steps 100 --global-batch 8 --seq-len 128 --smoke
+
+``--smoke`` uses the reduced same-family config on the host mesh (CPU
+container); without it the full config targets the production mesh (on a
+real pod set JAX_COORDINATOR/process env and jax.distributed initializes).
+Fault tolerance: checkpoints land in --ckpt-dir; rerunning the same command
+resumes from the latest step (elastic: the restore re-shards to whatever
+mesh the new job has).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + host mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args(argv)
+
+    import jax
+    if args.distributed:
+        jax.distributed.initialize()
+
+    from repro import configs as C
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = (C.get_smoke_config(args.arch) if args.smoke
+           else C.get_config(args.arch))
+    mesh = (make_host_mesh() if args.smoke
+            else make_production_mesh(multi_pod=args.multi_pod))
+    tcfg = TrainerConfig(
+        steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        grad_compression=args.grad_compression)
+    trainer = Trainer(cfg, tcfg, mesh)
+    out = trainer.train()
+    print("final loss:", out["history"][-1]["loss"] if out["history"]
+          else "n/a")
+    if out["straggler_events"]:
+        print("straggler events:", out["straggler_events"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Validation of the depth-probe methodology (EXPERIMENTS.md §Dry-run).
+
+For a small arch, compile the FULL-DEPTH program with all loops unrolled
+(ground truth for XLA cost analysis) and compare against the probe
+extrapolation.  Exactness is structural (identical shapes per superblock);
+this script demonstrates it empirically.
+
+  PYTHONPATH=src python -m repro.launch.validate_probes --arch whisper_tiny
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro import configs as C
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import (SHAPES, _compile_costs, probe_costs)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="whisper_tiny")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args(argv)
+
+    mesh = mesh_lib.make_production_mesh()
+    cfg = C.get_config(args.arch)
+
+    flops_p, bytes_p, coll_p, info = probe_costs(cfg, args.shape, mesh, 1)
+    print(f"probe-extrapolated: flops={flops_p:.6e} bytes={bytes_p:.6e} "
+          f"coll={coll_p['total_bytes']:.6e}  ({info})")
+
+    cfg_full = dataclasses.replace(cfg, scan_unroll=True,
+                                   attn_q_chunk=4096, attn_kv_chunk=8192)
+    flops_f, bytes_f, coll_f = _compile_costs(cfg_full, args.shape, mesh, 1)
+    print(f"full-depth unrolled: flops={flops_f:.6e} bytes={bytes_f:.6e} "
+          f"coll={coll_f['total_bytes']:.6e}")
+
+    rel = abs(flops_p - flops_f) / flops_f
+    relb = abs(bytes_p - bytes_f) / max(bytes_f, 1)
+    relc = abs(coll_p["total_bytes"] - coll_f["total_bytes"]) / \
+        max(coll_f["total_bytes"], 1)
+    print(f"relative error: flops={rel:.4%} bytes={relb:.4%} coll={relc:.4%}")
+    out = {"arch": args.arch, "shape": args.shape,
+           "probe": {"flops": flops_p, "bytes": bytes_p,
+                     "coll": coll_p["total_bytes"]},
+           "full": {"flops": flops_f, "bytes": bytes_f,
+                    "coll": coll_f["total_bytes"]},
+           "rel_err": {"flops": rel, "bytes": relb, "coll": relc}}
+    import pathlib
+    pathlib.Path("results").mkdir(exist_ok=True)
+    pathlib.Path("results/probe_validation.json").write_text(
+        json.dumps(out, indent=2))
+    print("wrote results/probe_validation.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Attention: GQA with blockwise (flash-style) softmax, decode paths, and MLA.
+
+``blockwise_attention`` streams KV in chunks with running max/denominator
+(lax.scan), bounding activation memory at O(q_chunk x kv_chunk) per step —
+this is what lets 32k-token prefill compile inside v5e HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Array, dense_init
+from repro.models.config import ArchConfig, MLAConfig
+from repro.models import rope as rope_lib
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention.
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: Array, k: Array, v: Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        unroll: bool = False) -> Array:
+    """q: (B,Sq,H,Dk), k: (B,Skv,KH,Dk), v: (B,Skv,KH,Dv); H = KH*G (GQA).
+
+    Returns (B,Sq,H,Dv).  fp32 softmax statistics; O(chunk^2) live scores.
+    ``unroll`` unrolls the chunk loops (dry-run cost accounting only —
+    XLA's cost analysis counts a while body once; DESIGN.md §6).
+    """
+    b, sq, h, dk = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kh
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    pad_q = -sq % cq
+    pad_k = -skv % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // cq, (skv + pad_k) // ck
+
+    qs = q.reshape(b, nq, cq, kh, g, dk)
+    kc = jnp.moveaxis(k.reshape(b, nk, ck, kh, dk), 1, 0)   # (nk,B,ck,KH,Dk)
+    vc = jnp.moveaxis(v.reshape(b, nk, ck, kh, dv), 1, 0)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+
+    def per_q(qi, qb):
+        # qb: (B,cq,KH,G,Dk)
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kb, vb, kj = xs
+            kpos = kj * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            mask = kpos[None, :] < skv                      # kv padding
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, dv), jnp.float32)
+        # checkpoint: backward recomputes the per-chunk scores instead of
+        # saving the full (nq, nk, B, H, cq, ck) score stack — this is what
+        # keeps the S^2 attention matrix out of HBM under AD.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                      (kc, vc, jnp.arange(nk)),
+                                      unroll=nk if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,KH,G,cq,Dv)
+        return out.transpose(0, 3, 1, 2, 4)                 # (B,cq,KH,G,Dv)
+
+    _, outs = jax.lax.scan(
+        lambda _, xs: (None, per_q(*xs)), None,
+        (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)),
+        unroll=nq if unroll else 1)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * cq, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, kv_len: Array,
+                     *, window: Optional[int] = None) -> Array:
+    """One-token attention over a (possibly partially filled) cache.
+
+    q: (B,1,H,Dk); caches: (B,S,KH,D*); kv_len: () current length.
+    """
+    b, _, h, dk = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qv = q.reshape(b, kh, g, dk)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qv.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None] < kv_len
+    if window is not None:
+        mask = mask & (pos[None] > kv_len - 1 - window)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (projections + rope + attention).
+# ---------------------------------------------------------------------------
+
+def init_gqa(key: Array, cfg: ArchConfig, dtype) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kh * hd), dtype),
+        "wv": dense_init(ks[2], (d, kh * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+
+
+def gqa_forward(p: dict, x: Array, positions: Array, cfg: ArchConfig, *,
+                window: Optional[int] = None,
+                kv_override: Optional[Tuple[Array, Array]] = None,
+                causal: bool = True, unroll: bool = False) -> Array:
+    """Full-sequence GQA.  kv_override supplies cross-attention memory."""
+    b, s, d = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(b, s, kh, hd)
+        v = (x @ p["wv"]).reshape(b, s, kh, hd)
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    else:
+        mem = kv_override[0]
+        k = (mem @ p["wk"]).reshape(b, mem.shape[1], kh, hd)
+        v = (mem @ p["wv"]).reshape(b, mem.shape[1], kh, hd)
+    out = blockwise_attention(q, k, v, causal=causal and kv_override is None,
+                              window=window, unroll=unroll,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def gqa_decode(p: dict, x: Array, cache: dict, pos: Array, cfg: ArchConfig, *,
+               window: Optional[int] = None) -> Tuple[Array, dict]:
+    """One-token decode.  cache: {k: (B,S,KH,hd), v: ..., len: ()}."""
+    b, _, d = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, kh, hd)
+    v = (x @ p["wv"]).reshape(b, 1, kh, hd)
+    positions = pos[None].astype(jnp.int32)                  # (1,)
+    q = rope_lib.apply_rope(q, positions[None], cfg.rope_theta)
+    k = rope_lib.apply_rope(k, positions[None], cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+    out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    y = out.reshape(b, 1, h * hd) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2).
+# ---------------------------------------------------------------------------
+
+def init_mla(key: Array, cfg: ArchConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, h * qk), dtype),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wuk": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_dim), dtype),
+        "wuv": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wkr": dense_init(ks[5], (d, m.qk_rope_dim), dtype),
+        "wo": dense_init(ks[0], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(p, x, positions, cfg):
+    from repro.models.common import rms_norm
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = rope_lib.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p: dict, x: Array, positions: Array, cfg: ArchConfig,
+                unroll: bool = False) -> Array:
+    """Training/prefill MLA: expand the latent per head, flash attention."""
+    from repro.models.common import rms_norm
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_kv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,S,r)
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, m.qk_nope_dim)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, m.v_head_dim)
+    k_rope = rope_lib.apply_rope(x @ p["wkr"], positions, cfg.rope_theta)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, h, m.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = blockwise_attention(q, k, v, causal=True, unroll=unroll,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+    return out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+
+
+def mla_decode(p: dict, x: Array, cache: dict, pos: Array, cfg: ArchConfig
+               ) -> Tuple[Array, dict]:
+    """Absorbed-matmul decode: the cache stays in latent space (r + rope).
+
+    cache: {ckv: (B,S,r), kr: (B,S,dr)}.
+    """
+    from repro.models.common import rms_norm
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = pos[None].astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, positions[None], cfg)   # (B,1,H,*)
+    c_kv = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,1,r)
+    k_rope = rope_lib.apply_rope(x @ p["wkr"], positions[None], cfg.rope_theta)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv, pos, 1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(cache["kr"], k_rope, pos, 1)
+    # absorb W_uk into q: q_eff (B,H,r)
+    wuk = p["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_eff,
+                       ckv_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        kr_cache.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_dim + m.qk_rope_dim,
+                                       jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    mask = jnp.arange(ckv_cache.shape[1])[None] < (pos + 1)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn, ckv_cache.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wuv.astype(jnp.float32))
+    y = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return y, {"ckv": ckv_cache, "kr": kr_cache}

@@ -1,0 +1,53 @@
+"""Shared NN primitives for the LM stack (pure JAX, explicit param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def dense_init(key: Array, shape: Sequence[int], dtype, scale: Optional[float]
+               = None) -> Array:
+    fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, tuple(shape), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    # 1/sqrt(d) keeps tied-head logits O(1) at init
+    s = 1.0 / np.sqrt(d)
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * s).astype(dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "gelu_plain": jax.nn.gelu,     # plain 2-matrix MLP (no GLU)
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron-style
+}
+
+GLU_ACTS = ("silu", "gelu")        # acts realized as gated (3-matrix) MLPs
+
+
+def softcap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x

@@ -1,0 +1,128 @@
+"""Feed-forward layers: GLU MLP and capacity-based MoE (GShard formulation).
+
+MoE dispatch uses einsums over (group, token, expert, capacity) one-hots so
+the XLA SPMD partitioner emits all-to-alls when experts are sharded on the
+``model`` axis (DESIGN.md §5).  ``group_size`` bounds the dispatch tensor
+independently of the mesh; top-k routing with capacity dropping + shared
+(always-on) experts for DeepSeek-style stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACT, Array, dense_init
+from repro.models.config import ArchConfig, MoEConfig
+
+
+# ---------------------------------------------------------------------------
+# Dense GLU MLP.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, d: int, d_ff: int, dtype, act: str = "silu") -> dict:
+    from repro.models.common import GLU_ACTS
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, (d, d_ff), dtype),
+         "wo": dense_init(k3, (d_ff, d), dtype)}
+    if act in GLU_ACTS:
+        p["wg"] = dense_init(k2, (d, d_ff), dtype)
+    return p
+
+
+def mlp_forward(p: dict, x: Array, act: str = "silu") -> Array:
+    if "wg" in p:
+        return (ACT[act](x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return ACT[act](x @ p["wi"]) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts.
+# ---------------------------------------------------------------------------
+
+def init_moe(key: Array, cfg: ArchConfig, dtype) -> dict:
+    e: MoEConfig = cfg.moe
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k1, (d, e.num_experts), jnp.float32),
+        "wi": dense_init(k2, (e.num_experts, d, e.d_expert), dtype),
+        "wg": dense_init(k3, (e.num_experts, d, e.d_expert), dtype),
+        "wo": dense_init(k4, (e.num_experts, e.d_expert, d), dtype),
+    }
+    if e.num_shared:
+        p["shared"] = init_mlp(k5, d, e.d_expert * e.num_shared, dtype,
+                               cfg.act)
+    return p
+
+
+def moe_forward(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    e: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    n_tok = b * s
+    gs = min(e.group_size, n_tok)
+    n_groups = n_tok // gs
+    xt = x.reshape(n_groups, gs, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]            # (G, N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, e.top_k)           # (G, N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    cap = int(gs * e.top_k * e.capacity_factor / e.num_experts)
+    cap = max(cap, e.top_k)
+
+    # Build positions within each expert's buffer, slot-by-slot (GShard).
+    sel = jax.nn.one_hot(idx, e.num_experts, dtype=jnp.float32)  # (G,N,K,E)
+    # cumulative count of assignments per expert across (slot-major) order
+    flat = sel.transpose(0, 2, 1, 3).reshape(n_groups, e.top_k * gs,
+                                             e.num_experts)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat               # (G, K*N, E)
+    pos = jnp.einsum("gte,gte->gt", pos_in_e, flat)          # slot position
+    keep = pos < cap
+    pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+    # back to (G, N, K)
+    keep = keep.reshape(n_groups, e.top_k, gs).transpose(0, 2, 1)
+    pos = pos.reshape(n_groups, e.top_k, gs).transpose(0, 2, 1)
+
+    gates = gate_vals * keep                                  # (G, N, K)
+    # Fused (expert, capacity) slot axis: the combine tensor is a single
+    # (G, N, E*C) one-hot-weighted matrix, so dispatch/combine are plain
+    # matmuls over the token axis (partitioner-friendly; no (G,N,E,C)
+    # rank-4 blowup — E*C/token is the same order as the routed
+    # activations themselves).
+    slot = idx * cap + pos                                    # (G, N, K)
+    combine = jnp.zeros((n_groups, gs, e.num_experts * cap), x.dtype)
+    for k in range(e.top_k):
+        combine = combine + gates[..., k, None].astype(x.dtype) * \
+            jax.nn.one_hot(slot[..., k], e.num_experts * cap, dtype=x.dtype)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    expert_in = jnp.einsum("gnz,gnd->gzd", dispatch,
+                           x.reshape(n_groups, gs, d))
+    expert_in = expert_in.reshape(n_groups, e.num_experts, cap, d)
+    # expert FFN: experts dim sharded on "model" (all-to-all at the einsum)
+    hg = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"])
+    hi = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"])
+    h = ACT[cfg.act](hg) * hi
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])     # (G,E,C,D)
+    y = jnp.einsum("gnz,gzd->gnd", combine,
+                   expert_out.reshape(n_groups, e.num_experts * cap, d))
+
+    if e.num_shared:
+        y = y + mlp_forward(p["shared"], xt, cfg.act)
+    return y.reshape(b, s, d)
+
+
+def moe_aux_loss(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Load-balance auxiliary loss (Switch-style), computed on router probs."""
+    e: MoEConfig = cfg.moe
+    logits = x.reshape(-1, x.shape[-1]).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), e.num_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return e.num_experts * jnp.sum(frac_tokens * frac_probs)

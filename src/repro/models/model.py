@@ -1,0 +1,251 @@
+"""LanguageModel: init / forward / loss / prefill / decode over segments.
+
+Parameters of each segment are STACKED on a leading superblock axis and
+executed with ``lax.scan`` (+ per-superblock remat) — compact HLO and
+constant compile time at any depth (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import stack as S
+from repro.models.common import Array, dense_init, embed_init, rms_norm, softcap
+from repro.models.config import ArchConfig
+
+PyTree = Any
+Identity = lambda x, *_: x
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LanguageModel:
+    cfg: ArchConfig
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: Array) -> PyTree:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        segs = S.plan_segments(cfg)
+        k_emb, k_head, k_seg, k_enc, k_vis = jax.random.split(key, 5)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, (cfg.d_model,
+                                                    cfg.vocab_size), dtype)
+        seg_params = []
+        for si, seg in enumerate(segs):
+            keys = jax.random.split(jax.random.fold_in(k_seg, si),
+                                    seg.repeats)
+
+            def init_one(k):
+                kk = jax.random.split(k, len(seg.kinds))
+                return {f"k{i}": S.init_layer(kk[i], kind, cfg, seg.use_moe,
+                                              dtype)
+                        for i, kind in enumerate(seg.kinds)}
+
+            seg_params.append(jax.vmap(init_one)(keys))
+        params["segments"] = seg_params
+        if cfg.encoder_layers:
+            enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: S.init_layer(k, "enc", cfg, False, dtype))(enc_keys)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.num_vision_tokens:
+            params["vision_proj"] = dense_init(k_vis, (cfg.d_model,
+                                                       cfg.d_model), dtype)
+        return params
+
+    # -- shared segment walk --------------------------------------------------
+    def _run_segments(self, params: PyTree, x: Array, ctx: dict) -> Array:
+        cfg = self.cfg
+        segs = S.plan_segments(cfg)
+        for seg, sp in zip(segs, params["segments"]):
+            def body(h, layer_params, seg=seg):
+                for i, kind in enumerate(seg.kinds):
+                    h = S.layer_forward(layer_params[f"k{i}"], h, kind, cfg,
+                                        seg.use_moe, ctx)
+                    h = ctx["shard_act"](h)
+                return h, None
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, sp,
+                                unroll=seg.repeats if cfg.scan_unroll else 1)
+        return x
+
+    def _encode(self, params: PyTree, memory_embeds: Array, ctx: dict
+                ) -> Array:
+        """Encoder stack over stub modality embeddings (audio frames)."""
+        cfg = self.cfg
+        h = memory_embeds
+        enc_ctx = dict(ctx)
+        enc_ctx["positions"] = jnp.broadcast_to(
+            jnp.arange(h.shape[1])[None], h.shape[:2])
+
+        def body(h, layer_params):
+            h = S.layer_forward(layer_params["k0"], h, "enc", cfg, False,
+                                enc_ctx)
+            return h, None
+
+        enc_params = jax.tree_util.tree_map(lambda a: a, params["encoder"])
+        wrapped = {"k0": enc_params}
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, wrapped,
+                            unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _prepare_memory(self, params: PyTree, extras: dict, ctx: dict):
+        cfg = self.cfg
+        if cfg.encoder_layers and "memory_embeds" in extras:
+            ctx["memory"] = self._encode(params, extras["memory_embeds"], ctx)
+            ctx["memory_len"] = ctx["memory"].shape[1]
+        elif cfg.num_vision_tokens and "vision_embeds" in extras:
+            ctx["memory"] = extras["vision_embeds"] @ params["vision_proj"]
+            ctx["memory_len"] = ctx["memory"].shape[1]
+
+    # -- full-sequence forward (train / prefill logits) -----------------------
+    def forward(self, params: PyTree, tokens: Array,
+                extras: Optional[dict] = None,
+                shard_act: Callable = Identity) -> Array:
+        cfg = self.cfg
+        extras = extras or {}
+        b, s_len = tokens.shape
+        x = params["embed"][tokens]                     # (B,S,D) gather
+        positions = jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len))
+        ctx = {"positions": positions, "window": cfg.sliding_window,
+               "shard_act": shard_act, "unroll": cfg.scan_unroll}
+        self._prepare_memory(params, extras, ctx)
+        x = self._run_segments(params, x, ctx)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head
+        return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+    def loss(self, params: PyTree, batch: dict,
+             shard_act: Callable = Identity) -> Tuple[Array, dict]:
+        logits = self.forward(params, batch["tokens"],
+                              extras={k: v for k, v in batch.items()
+                                      if k not in ("tokens", "labels")},
+                              shard_act=shard_act)
+        labels = batch["labels"]
+        # Partitioner-friendly CE over the vocab-sharded logits: one-hot
+        # contraction fuses into the reduction (no gather / no all-gather
+        # of (B,S,V)); logsumexp reduces over the sharded axis via psum.
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        nll = lse - label_logit
+        loss = jnp.mean(nll)
+        return loss, {"loss": loss,
+                      "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int,
+                   extras: Optional[dict] = None) -> PyTree:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        extras = extras or {}
+        segs = S.plan_segments(cfg)
+        ctx = {"window": cfg.sliding_window,
+               "memory_len": (extras.get("memory_len") or
+                              cfg.num_vision_tokens or cfg.encoder_seq or 0)}
+        caches = []
+        for seg in segs:
+            def one(_):
+                return {f"k{i}": S.init_layer_cache(kind, cfg, batch, max_seq,
+                                                    dtype, ctx)
+                        for i, kind in enumerate(seg.kinds)}
+            caches.append(jax.vmap(one)(jnp.arange(seg.repeats)))
+        return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params: PyTree, tokens: Array,
+                extras: Optional[dict] = None,
+                shard_act: Callable = Identity) -> Tuple[Array, PyTree]:
+        """Full-sequence prefill: last-token logits + filled decode caches.
+
+        Returned caches hold exactly the processed sequence (attention k/v
+        of length S or the sliding window; recurrent final states).  The
+        serving engine re-aligns them into fixed-size decode buffers.
+        """
+        cfg = self.cfg
+        extras = extras or {}
+        b, s_len = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(s_len)[None], (b, s_len))
+        ctx = {"positions": positions, "window": cfg.sliding_window,
+               "shard_act": shard_act, "unroll": cfg.scan_unroll}
+        self._prepare_memory(params, extras, ctx)
+        if "memory" in ctx:
+            ctx["memory_len"] = ctx["memory"].shape[1]
+        segs = S.plan_segments(cfg)
+        caches = []
+        for seg, sp in zip(segs, params["segments"]):
+            def body(h, layer_params, seg=seg):
+                new_c = {}
+                for i, kind in enumerate(seg.kinds):
+                    h, new_c[f"k{i}"] = S.layer_prefill(
+                        layer_params[f"k{i}"], h, kind, cfg, seg.use_moe, ctx)
+                    h = ctx["shard_act"](h)
+                return h, new_c
+
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, seg_cache = jax.lax.scan(
+                body, x, sp, unroll=seg.repeats if cfg.scan_unroll else 1)
+            caches.append(seg_cache)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = softcap((x @ head).astype(jnp.float32), cfg.logit_softcap)
+        return logits[:, 0], {"layers": caches,
+                              "pos": jnp.full((), s_len, jnp.int32)}
+
+    def decode_step(self, params: PyTree, token: Array, cache: PyTree,
+                    extras: Optional[dict] = None,
+                    shard_act: Callable = Identity) -> Tuple[Array, PyTree]:
+        """token: (B,) -> logits (B,V), updated cache (one position)."""
+        cfg = self.cfg
+        extras = extras or {}
+        segs = S.plan_segments(cfg)
+        pos = cache["pos"]
+        x = params["embed"][token][:, None, :]          # (B,1,D)
+        ctx = {"positions": None, "window": cfg.sliding_window,
+               "shard_act": shard_act,
+               "memory_len": (extras.get("memory_len") or
+                              cfg.num_vision_tokens or cfg.encoder_seq or 0)}
+        new_caches = []
+        for seg, sp, sc in zip(segs, params["segments"], cache["layers"]):
+            def body(h, xs, seg=seg):
+                layer_params, layer_cache = xs
+                new_lc = {}
+                for i, kind in enumerate(seg.kinds):
+                    h, new_lc[f"k{i}"] = S.layer_decode(
+                        layer_params[f"k{i}"], h, layer_cache[f"k{i}"], kind,
+                        cfg, seg.use_moe, pos, ctx)
+                    h = ctx["shard_act"](h)
+                return h, new_lc
+
+            x, nc = jax.lax.scan(body, x, (sp, sc),
+                                 unroll=seg.repeats if cfg.scan_unroll else 1)
+            new_caches.append(nc)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = softcap((x @ head).astype(jnp.float32), cfg.logit_softcap)
+        return logits[:, 0], {"layers": new_caches, "pos": pos + 1}
+
+
+def build_model(cfg: ArchConfig) -> LanguageModel:
+    return LanguageModel(cfg)

@@ -1,0 +1,351 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+The causal temporal depthwise convolutions in these blocks are banks of
+independent 1-D convolutions — exactly the FuSeConv primitive (paper §3.2,
+DESIGN.md §4) — and route through ``repro.core.fuseconv.fuse_conv1d_temporal``
+(Pallas fast path available via ``repro.kernels.ops``).
+
+Linear recurrences (RG-LRU) use ``jax.lax.associative_scan`` (log-depth,
+parallel); nonlinear cells (mLSTM/sLSTM) use ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fuseconv as fc
+from repro.models.common import ACT, Array, dense_init, rms_norm
+from repro.models.config import ArchConfig, RecurrentConfig
+
+SQRT2 = 1.4142135623730951
+
+
+# ---------------------------------------------------------------------------
+# Block-diagonal linear (Griffin gate projections).
+# ---------------------------------------------------------------------------
+
+def init_blockdiag(key: Array, w: int, blocks: int, dtype) -> Array:
+    bw = w // blocks
+    return dense_init(key, (blocks, bw, bw), dtype)
+
+
+def blockdiag_apply(wt: Array, x: Array) -> Array:
+    nb, bw, _ = wt.shape
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, nb, bw)
+    y = jnp.einsum("...nb,nbc->...nc", xb, wt)
+    return y.reshape(*lead, nb * bw)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU.
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key: Array, cfg: ArchConfig, dtype) -> dict:
+    rc: RecurrentConfig = cfg.recurrent
+    d = cfg.d_model
+    w = int(d * rc.width_factor)
+    nb = rc.heads or 16
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype),
+        "conv": dense_init(ks[2], (rc.conv_width, w), dtype),
+        "wa": init_blockdiag(ks[3], w, nb, dtype),
+        "wx": init_blockdiag(ks[4], w, nb, dtype),
+        "lam": jnp.linspace(0.5, 4.0, w).astype(dtype),  # softplus-param of a
+        "w_out": dense_init(ks[5], (w, d), dtype),
+    }
+
+
+def _rglru_coeffs(p: dict, x: Array) -> Tuple[Array, Array]:
+    """x: (..., W) post-conv branch.  Returns per-step (a, b) of
+    h_t = a_t * h_{t-1} + b_t, computed in fp32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(blockdiag_apply(p["wa"].astype(jnp.float32), x32))
+    i = jax.nn.sigmoid(blockdiag_apply(p["wx"].astype(jnp.float32), x32))
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = x32 * i
+    b = gated * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b
+
+
+def _assoc_linear(a: Array, b: Array) -> Array:
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+@jax.custom_vjp
+def linear_scan(a: Array, b: Array) -> Array:
+    """h_t = a_t * h_{t-1} + b_t over axis 1, h_0 = 0.
+
+    Forward: parallel (log-depth) associative scan.  Backward: custom VJP
+    with a sequential reverse recurrence — plain autodiff through
+    associative_scan saves every tree level (measured: 143 GB/chip on
+    recurrentgemma train_4k; §Perf Cell D), the custom rule saves only
+    (a, h).
+    """
+    return _assoc_linear(a, b)
+
+
+def _linear_scan_fwd(a, b):
+    h = _assoc_linear(a, b)
+    return h, (a, h)
+
+
+def _linear_scan_bwd(res, dh):
+    a, h = res
+    # g_t = dh_t + a_{t+1} g_{t+1}  (reverse recurrence); db = g;
+    # da_t = g_t * h_{t-1}
+    a_next = jnp.concatenate([a[:, 1:], jnp.ones_like(a[:, :1])], axis=1)
+
+    def step(carry, xs):
+        an, dht = xs
+        g = dht + an * carry
+        return g, g
+
+    xs = (jnp.moveaxis(a_next[:, ::-1], 1, 0),
+          jnp.moveaxis(dh[:, ::-1], 1, 0))
+    _, g_rev = jax.lax.scan(step, jnp.zeros_like(dh[:, 0]), xs)
+    g = jnp.moveaxis(g_rev, 0, 1)[:, ::-1]
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return g * h_prev, g
+
+
+linear_scan.defvjp(_linear_scan_fwd, _linear_scan_bwd)
+
+
+def rglru_scan(p: dict, x: Array) -> Array:
+    """Full-sequence RG-LRU over (B, S, W)."""
+    a, b = _rglru_coeffs(p, x)
+    return linear_scan(a, b).astype(x.dtype)
+
+
+def rglru_block_forward(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    h = x @ p["w_in"]
+    h = fc.fuse_conv1d_temporal(h, p["conv"], causal=True)
+    h = rglru_scan(p, h)
+    return (h * gate) @ p["w_out"]
+
+
+def rglru_block_decode(p: dict, x: Array, state: dict, cfg: ArchConfig
+                       ) -> Tuple[Array, dict]:
+    """x: (B,1,D); state: {conv: (B,K-1,W), h: (B,W)}."""
+    gate = jax.nn.gelu(x @ p["w_gate"])[:, 0]
+    u = (x @ p["w_in"])[:, 0]                                # (B, W)
+    conv_state, u = fc.fuse_conv1d_temporal_step(state["conv"], u, p["conv"])
+    a, b = _rglru_coeffs(p, u)
+    h = a * state["h"].astype(jnp.float32) + b
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y[:, None, :], {"conv": conv_state, "h": h}
+
+
+def rglru_init_state(batch: int, cfg: ArchConfig, dtype) -> dict:
+    rc = cfg.recurrent
+    w = int(cfg.d_model * rc.width_factor)
+    return {"conv": jnp.zeros((batch, rc.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating).
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key: Array, cfg: ArchConfig, dtype) -> dict:
+    rc: RecurrentConfig = cfg.recurrent
+    d = cfg.d_model
+    di = 2 * d                      # official up-projection factor 2
+    h = rc.heads or cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype),       # [x_m, z_gate]
+        "conv": dense_init(ks[1], (rc.conv_width, di), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype),
+        "wk": dense_init(ks[3], (di, di), dtype),
+        "wv": dense_init(ks[4], (di, di), dtype),
+        "w_if": dense_init(ks[5], (di, 2 * h), dtype),       # i,f gate logits
+        "norm": jnp.zeros((di,), dtype),
+        "w_down": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def mlstm_cell_scan(q: Array, k: Array, v: Array, i_log: Array, f_log: Array
+                    ) -> Array:
+    """Stabilized recurrent mLSTM.  q,k,v: (B,S,H,Dh); gates: (B,S,H)."""
+    b, s, h, dh = q.shape
+    q = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    k = k.astype(jnp.float32) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    v = v.astype(jnp.float32)
+    i_log = i_log.astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(f_log.astype(jnp.float32))
+
+    def step(carry, xs):
+        c, n, m = carry                # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qt, kt, vt, it, ft = xs
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p[..., None, None] * c + \
+            i_p[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_log, f_log))
+    _, ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(ys, 0, 1)      # (B,S,H,Dh)
+
+
+def mlstm_block_forward(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    rc = cfg.recurrent
+    h_heads = rc.heads or cfg.num_heads
+    b, s, d = x.shape
+    di = 2 * d
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(fc.fuse_conv1d_temporal(xm, p["conv"], causal=True))
+    q = (xc @ p["wq"]).reshape(b, s, h_heads, -1)
+    k = (xc @ p["wk"]).reshape(b, s, h_heads, -1)
+    v = (xm @ p["wv"]).reshape(b, s, h_heads, -1)
+    gates = xc @ p["w_if"]
+    i_log, f_log = jnp.split(gates.reshape(b, s, 2, h_heads), 2, axis=2)
+    y = mlstm_cell_scan(q, k, v, i_log[:, :, 0], f_log[:, :, 0])
+    y = y.reshape(b, s, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) + xc
+    y = y * jax.nn.silu(z)
+    return (y @ p["w_down"]).astype(x.dtype)
+
+
+def mlstm_block_decode(p: dict, x: Array, state: dict, cfg: ArchConfig
+                       ) -> Tuple[Array, dict]:
+    rc = cfg.recurrent
+    h_heads = rc.heads or cfg.num_heads
+    b = x.shape[0]
+    d = x.shape[-1]
+    di = 2 * d
+    up = (x @ p["w_up"])[:, 0]
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state, xc = fc.fuse_conv1d_temporal_step(state["conv"], xm, p["conv"])
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, h_heads, -1)
+    k = (xc @ p["wk"]).reshape(b, h_heads, -1)
+    v = (xm @ p["wv"]).reshape(b, h_heads, -1)
+    gates = (xc @ p["w_if"]).reshape(b, 2, h_heads)
+    it = gates[:, 0].astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(gates[:, 1].astype(jnp.float32))
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    kf = k.astype(jnp.float32) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c = f_p[..., None, None] * c + \
+        i_p[..., None, None] * (kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, di)
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps) + xc
+    y = y * jax.nn.silu(z)
+    return (y @ p["w_down"])[:, None, :], \
+        {"conv": conv_state, "c": c, "n": n, "m": m_new}
+
+
+def mlstm_init_state(batch: int, cfg: ArchConfig, dtype) -> dict:
+    rc = cfg.recurrent
+    d = cfg.d_model
+    di = 2 * d
+    h = rc.heads or cfg.num_heads
+    dh = di // h
+    return {"conv": jnp.zeros((batch, rc.conv_width - 1, di), dtype),
+            "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -jnp.inf, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, recurrent h-dependence).
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key: Array, cfg: ArchConfig, dtype) -> dict:
+    rc: RecurrentConfig = cfg.recurrent
+    d = cfg.d_model
+    h = rc.heads or cfg.num_heads
+    ks = jax.random.split(key, 6)
+    dff = int(d * 4 / 3)
+    return {
+        "conv": dense_init(ks[0], (rc.conv_width, d), dtype),
+        "w_gates": dense_init(ks[1], (d, 4 * d), dtype),     # i,f,z,o from x
+        "r_gates": init_blockdiag(ks[2], 4 * d, 4 * h, dtype),  # from h_prev
+        "norm": jnp.zeros((d,), dtype),
+        "ffn_wi": dense_init(ks[3], (d, dff), dtype),
+        "ffn_wg": dense_init(ks[4], (d, dff), dtype),
+        "ffn_wo": dense_init(ks[5], (dff, d), dtype),
+    }
+
+
+def _slstm_step(p, carry, xt):
+    c, n, m, h_prev = carry            # (B,D) each
+    pre = xt + blockdiag_apply(
+        p["r_gates"].astype(jnp.float32),
+        jnp.tile(h_prev, (1, 4)))
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(z_t)
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h), h
+
+
+def slstm_block_forward(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    b, s, d = x.shape
+    xc = jax.nn.silu(fc.fuse_conv1d_temporal(x, p["conv"], causal=True))
+    pre = (xc @ p["w_gates"]).astype(jnp.float32)            # (B,S,4D)
+    z0 = jnp.zeros((b, d), jnp.float32)
+    carry0 = (z0, z0, jnp.full((b, d), -jnp.inf, jnp.float32), z0)
+    _, hs = jax.lax.scan(lambda c, xt: _slstm_step(p, c, xt),
+                         carry0, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)               # (B,S,D)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    return (ACT["gelu"](h @ p["ffn_wg"]) * (h @ p["ffn_wi"])) @ p["ffn_wo"]
+
+
+def slstm_block_decode(p: dict, x: Array, state: dict, cfg: ArchConfig
+                       ) -> Tuple[Array, dict]:
+    conv_state, xc = fc.fuse_conv1d_temporal_step(state["conv"], x[:, 0],
+                                                  p["conv"])
+    xc = jax.nn.silu(xc)
+    pre = (xc @ p["w_gates"]).astype(jnp.float32)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), _ = _slstm_step(p, carry, pre)
+    y = rms_norm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = (ACT["gelu"](y @ p["ffn_wg"]) * (y @ p["ffn_wi"])) @ p["ffn_wo"]
+    return y[:, None, :], {"conv": conv_state, "c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_init_state(batch: int, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    rc = cfg.recurrent
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"conv": jnp.zeros((batch, rc.conv_width - 1, d), dtype),
+            "c": z, "n": z, "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+            "h": z}

@@ -1,0 +1,25 @@
+"""Rotary position embeddings (applied over the last head dim)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    if x.ndim == angles.ndim + 1:                      # head axis present
+        angles = angles[..., None, :]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)

@@ -1,0 +1,61 @@
+"""Modality stems.  Whisper's conv frontend is a STUB for the dry-run
+(input_specs provide precomputed frame embeddings per the brief), but we
+ship both the reference conv stem and a FuSe-factorized variant to
+demonstrate the paper's drop-in operator on an audio stem (DESIGN.md §4):
+
+  reference:  conv1d(k=3, mel->d) . gelu . conv1d(k=3, s=2, d->d) . gelu
+  FuSe:       pw(mel->d) . fuse1d(k=3) . gelu . fuse1d(k=3, s=2) . pw . gelu
+
+MACs per frame drop from k*d*(mel + d) to d*(mel + 2k + d) — the same
+K^2->K style factorization as FuSeConv, in 1-D.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fuseconv as fc
+from repro.models.common import Array, dense_init
+
+
+def init_whisper_stem(key: Array, n_mels: int, d: int, dtype=jnp.float32
+                      ) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"c1": dense_init(k1, (3, n_mels, d), dtype),
+            "c2": dense_init(k2, (3, d, d), dtype)}
+
+
+def whisper_stem(p: dict, mel: Array) -> Array:
+    """mel: (B, T, n_mels) -> (B, T//2, d)."""
+    y = jax.lax.conv_general_dilated(
+        mel, p["c1"], (1,), "SAME", dimension_numbers=("NTC", "TIO", "NTC"))
+    y = jax.nn.gelu(y)
+    y = jax.lax.conv_general_dilated(
+        y, p["c2"], (2,), "SAME", dimension_numbers=("NTC", "TIO", "NTC"))
+    return jax.nn.gelu(y)
+
+
+def init_fuse_whisper_stem(key: Array, n_mels: int, d: int,
+                           dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {"pw_in": dense_init(ks[0], (n_mels, d), dtype),
+            "t1": dense_init(ks[1], (3, d), dtype),
+            "t2": dense_init(ks[2], (3, d), dtype),
+            "pw_out": dense_init(ks[3], (d, d), dtype)}
+
+
+def fuse_whisper_stem(p: dict, mel: Array) -> Array:
+    """FuSe-factorized stem: same (B, T//2, d) output contract."""
+    y = mel @ p["pw_in"]
+    y = jax.nn.gelu(fc.fuse_conv1d_temporal(y, p["t1"], causal=False))
+    y = fc.fuse_conv1d_temporal(y, p["t2"], causal=False)[:, ::2]
+    return jax.nn.gelu(y @ p["pw_out"])
+
+
+def stem_macs(n_mels: int, d: int, frames: int) -> Tuple[int, int]:
+    ref = frames * 3 * n_mels * d + (frames // 2) * 3 * d * d
+    fuse = frames * (n_mels * d + 3 * d) + frames * 3 * d + \
+        (frames // 2) * d * d
+    return ref, fuse

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw, sgd_momentum, rmsprop, clip_by_global_norm, ema_init, ema_update,
+    apply_updates, global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    cosine_schedule, exponential_decay, warmup_cosine,
+)

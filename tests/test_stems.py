@@ -1,0 +1,23 @@
+"""FuSe-factorized audio stem: drop-in contract + MAC reduction."""
+import jax
+import jax.numpy as jnp
+
+from repro.models import stems
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_stems_same_output_contract():
+    mel = jax.random.normal(KEY, (2, 40, 80))
+    ref = stems.whisper_stem(stems.init_whisper_stem(KEY, 80, 64), mel)
+    fus = stems.fuse_whisper_stem(stems.init_fuse_whisper_stem(KEY, 80, 64),
+                                  mel)
+    assert ref.shape == fus.shape == (2, 20, 64)
+    assert bool(jnp.isfinite(ref).all() and jnp.isfinite(fus).all())
+
+
+def test_stem_macs_reduced():
+    ref, fuse = stems.stem_macs(80, 384, 3000)
+    assert fuse < ref
+    # K x style reduction on the conv portion
+    assert fuse < 0.55 * ref

@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline mechanism chain on one tiny network:
+  teacher (depthwise) -> scaffold -> NOS step -> collapse -> FuSe-Half
+  inference that is (a) numerically consistent and (b) faster on the
+  simulated 16x16 systolic array.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nos, search
+from repro.data.vision_synth import SynthVisionConfig
+from repro.systolic.simulator import simulate_network
+from repro.train.vision import VisionTrainConfig, train_nos, train_vision
+from repro.vision import counting, zoo
+
+
+def test_end_to_end_nos_pipeline():
+    """A few steps of each phase — wiring, shapes, finiteness, latency win."""
+    net = zoo.tiny_net(num_classes=4, resolution=16, width=8)
+    dcfg = SynthVisionConfig(resolution=16, num_classes=4, noise=0.5)
+    cfg = VisionTrainConfig(steps=6, batch=16, eval_batches=1)
+
+    teacher = train_vision(net, "depthwise", cfg, dcfg)
+    assert 0.0 <= teacher["eval_acc"] <= 1.0
+
+    out = train_nos(net, teacher["params"], cfg, dcfg)
+    assert 0.0 <= out["eval_acc"] <= 1.0
+    assert all(v == "fuse_half" for v in out["variants"])
+
+    # the collapsed network must be cheaper on the systolic array
+    base_sim = simulate_network(zoo.lower_to_ir(net, "depthwise"))
+    fuse_sim = simulate_network(zoo.lower_to_ir(net, "fuse_half"))
+    assert fuse_sim.cycles < base_sim.cycles
+
+
+def test_hybrid_search_end_to_end():
+    """EA over the tiny net with a synthetic accuracy surface."""
+    net = zoo.tiny_net()
+    n = net.num_spatial_stages
+
+    def acc(mask):  # prefers FuSe on later stages
+        return 0.5 + 0.1 * sum(m * i for i, m in enumerate(mask)) / n
+
+    out = search.evolutionary_search(
+        net, acc, search.EAConfig(population=12, iterations=6,
+                                  latency_weight=0.01))
+    assert len(out["evaluated"]) > 10
+    front = search.pareto_front(out["evaluated"])
+    assert front
+
+
+def test_macs_params_end_to_end_consistency():
+    """Counting (Table 3 path) and simulation (Fig 8 path) agree on the IR."""
+    net = zoo.mobilenet_v2()
+    for variant in ("depthwise", "fuse_half"):
+        ops = zoo.lower_to_ir(net, variant)
+        c = counting.count(net, variant)
+        sim = simulate_network(ops)
+        assert sim.useful_macs == c["macs"]
