@@ -1,0 +1,18 @@
+# One-command checks for every PR.
+#   make test        — tier-1 pytest suite
+#   make bench-smoke — tiny vision-serve benchmark (writes BENCH_serve.json)
+#   make serve-demo  — end-to-end serving example on the Pallas backend
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke serve-demo
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run serve --json BENCH_serve.json
+
+serve-demo:
+	$(PY) examples/serve_vision.py

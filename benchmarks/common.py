@@ -3,6 +3,22 @@ import time
 
 import jax
 
+# Machine-readable capture: run.py calls start_suite() before each suite so
+# every emit() lands in _RESULTS[suite][name] (numeric us_per_call only).
+_RESULTS: dict = {}
+_SUITE = None
+
+
+def start_suite(name: str) -> None:
+    global _SUITE
+    _SUITE = name
+    _RESULTS.setdefault(name, {})
+
+
+def results() -> dict:
+    """{suite: {name: us_per_call}} for everything emitted so far."""
+    return _RESULTS
+
 
 def time_call(fn, *args, iters: int = 3, warmup: int = 1):
     """us per call of a jitted function on this host (CPU container)."""
@@ -18,3 +34,8 @@ def time_call(fn, *args, iters: int = 3, warmup: int = 1):
 
 def emit(name: str, us_per_call, derived: str):
     print(f"{name},{us_per_call},{derived}")
+    if _SUITE is not None:
+        try:
+            _RESULTS[_SUITE][name] = float(us_per_call)
+        except (TypeError, ValueError):
+            pass

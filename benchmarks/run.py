@@ -2,13 +2,17 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``            — everything
 ``PYTHONPATH=src python -m benchmarks.run table3 fig8`` — a subset
-Prints ``name,us_per_call,derived`` CSV lines.
+``PYTHONPATH=src python -m benchmarks.run --json out.json serve``
+Prints ``name,us_per_call,derived`` CSV lines; ``--json`` additionally
+writes machine-readable ``{suite: {name: us_per_call}}`` results.
 """
-import sys
+import argparse
+import json
 
-from benchmarks import (fig8_latency, fig9_operators, fig10_utilization,
-                        fig11_bandwidth, kernels_micro, roofline,
-                        table2_overheads, table3_macs_params, table4_nas)
+from benchmarks import (common, fig8_latency, fig9_operators,
+                        fig10_utilization, fig11_bandwidth, kernels_micro,
+                        roofline, serve_vision, table2_overheads,
+                        table3_macs_params, table4_nas)
 
 SUITES = {
     "table2": table2_overheads.run,
@@ -20,14 +24,27 @@ SUITES = {
     "fig11": fig11_bandwidth.run,
     "kernels": kernels_micro.run,
     "roofline": roofline.run,
+    "serve": serve_vision.run,
 }
 
 
-def main() -> None:
-    picks = sys.argv[1:] or list(SUITES)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*", choices=[[], *SUITES],
+                    help="subset of suites (default: all)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write {suite: {name: us_per_call}} to this path")
+    args = ap.parse_args(argv)
+
+    picks = args.suites or list(SUITES)
     for name in picks:
         print(f"== {name} ==")
+        common.start_suite(name)
         SUITES[name]()
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(common.results(), f, indent=2, sort_keys=True)
+        print(f"wrote {args.json_path}")
 
 
 if __name__ == "__main__":

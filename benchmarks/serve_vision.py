@@ -1,0 +1,68 @@
+"""Vision serving engine benchmark: submit->flush wall clock + cost model.
+
+Serves a fixed mixed burst (two tiny_net variants, mixed image sizes)
+through the VisionServeEngine on the XLA backend and reports us/request,
+plus the ST-OS cost-model latency points that drive bucket selection.
+Interpret-mode Pallas timings are not TPU-representative, so the serving
+wall clock is tracked on the reference backend; kernel-level numbers live
+in kernels_micro.py.
+"""
+import time
+
+from benchmarks.common import emit
+
+BUCKETS = (1, 2, 4)
+REQUESTS = 8
+
+
+def _build_engine(backend: str):
+    from repro.serving.vision import (ModelRegistry, SystolicCostModel,
+                                      VisionServeEngine)
+    from repro.vision import zoo
+
+    registry = ModelRegistry(backend=backend)
+    net = zoo.tiny_net()
+    registry.register(net, "depthwise")
+    registry.register(net, "fuse_full")
+    engine = VisionServeEngine(registry, cost_model=SystolicCostModel(),
+                               buckets=BUCKETS)
+    engine.warmup()
+    return engine
+
+
+def _burst(engine, seed: int):
+    from repro.serving.vision import submit_mixed_burst
+    submit_mixed_burst(engine, REQUESTS, seed=seed)
+    return engine.flush()
+
+
+def run(backend: str = "xla"):
+    print("# serve: us/request through submit->flush "
+          f"({REQUESTS}-request mixed burst, backend={backend})")
+    engine = _build_engine(backend)
+    _burst(engine, seed=0)                          # warm scheduling path
+    iters = 3
+    t0 = time.perf_counter()
+    for i in range(iters):
+        results = _burst(engine, seed=i)
+    dt = time.perf_counter() - t0
+    us_per_req = dt / (iters * REQUESTS) * 1e6
+    m = engine.metrics.snapshot()
+    emit(f"serve.flush{REQUESTS}.{backend}", f"{us_per_req:.0f}",
+         f"ips={m['throughput_ips']:.0f} batches={m['batches']} "
+         f"padded={m['padded_slots']}")
+    assert all(r.status == "ok" for r in results)
+
+    # The cost-model points the scheduler sees (simulated accelerator ms).
+    # us_per_call is "-": these are not timings and must not land in the
+    # machine-readable --json trajectory.
+    cm = engine.cost_model
+    for key in engine.registry.keys():
+        model = engine.registry.get(key)
+        pts = ",".join(f"b{b}={cm.predicted_ms(model, b):.3f}ms"
+                       for b in BUCKETS)
+        emit(f"serve.costmodel.{key}", "-", pts)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Example: batched FuSeConv vision serving with cost-model scheduling.
+
+Registers two zoo networks (baseline depthwise + FuSe-Full) on the Pallas
+backend (interpret mode on CPU), submits a burst of mixed-size image
+requests, and lets the engine bucket/pad/schedule them with the ST-OS
+systolic simulator as its cost model.  Every returned logit vector is
+checked against the XLA reference path, so this doubles as an end-to-end
+correctness demo of the kernels-through-serving stack.
+
+Run:  PYTHONPATH=src python examples/serve_vision.py [--backend xla]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.serving.vision import (ModelRegistry, SystolicCostModel,
+                                  VisionServeEngine, fit_image,
+                                  submit_mixed_burst)
+from repro.vision import zoo
+
+
+def reference_logits(model, image: np.ndarray) -> np.ndarray:
+    """The XLA reference path for one request (batch of 1, no engine)."""
+    x = fit_image(np.asarray(image, np.float32), model.resolution)[None]
+    logits, _ = zoo.apply_network(model.params, model.net, x, model.variant,
+                                  backend="xla")
+    return np.asarray(logits[0])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="pallas",
+                    choices=["xla", "pallas", "pallas_tpu"])
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    registry = ModelRegistry(backend=args.backend)
+    net = zoo.tiny_net()
+    registry.register(net, "depthwise")          # -> "tiny_net/depthwise"
+    registry.register(net, "fuse_full")          # -> "tiny_net/fuse_full"
+
+    engine = VisionServeEngine(registry, cost_model=SystolicCostModel(),
+                               buckets=(1, 2, 4))
+    t0 = time.perf_counter()
+    engine.warmup()
+    print(f"warmup (compile {len(registry.compiled_buckets())} "
+          f"model x bucket pairs): {time.perf_counter() - t0:.1f}s")
+
+    # Mixed-size burst, round-robin across the two models.
+    submitted = {rid: (key, img) for rid, key, img in
+                 submit_mixed_burst(engine, args.requests, seed=0)}
+    results = engine.flush()
+
+    print(f"\n{'rid':>3} {'model':28} {'bucket':>6} {'fill':>4} "
+          f"{'predicted_ms':>12} {'measured_ms':>11} {'e2e_ms':>8}  check")
+    worst = 0.0
+    for r in results:
+        key, img = submitted[r.rid]
+        ref = reference_logits(registry.get(key), img)
+        assert r.logits.shape == ref.shape, (r.logits.shape, ref.shape)
+        err = float(np.max(np.abs(r.logits - ref)))
+        worst = max(worst, err)
+        ok = "OK" if np.allclose(r.logits, ref, rtol=1e-4, atol=1e-4) else \
+            f"MISMATCH({err:.2e})"
+        print(f"{r.rid:>3} {r.model:28} {r.bucket:>6} {r.batch_fill:>4} "
+              f"{r.predicted_ms:>12.3f} {r.run_ms:>11.2f} {r.e2e_ms:>8.1f}  "
+              f"{ok}")
+
+    m = engine.metrics.snapshot()
+    print(f"\nthroughput: {m['throughput_ips']:.1f} images/s "
+          f"({m['completed']} completed, {m['batches']} batches, "
+          f"{m['padded_slots']} padded slots)")
+    print("predicted latency is the ST-OS systolic cost model (paper "
+          "accelerator); measured is this host's wall clock — the gap is "
+          "the point: scheduling decisions come from the hardware model, "
+          "not from the CPU executing the demo.")
+    print(f"max |engine - reference| over all logits: {worst:.2e}")
+    for model_key, stats in m["e2e"].items():
+        print(f"  {model_key}: e2e p50={stats['p50_ms']:.1f}ms "
+              f"p99={stats['p99_ms']:.1f}ms (n={stats['count']})")
+
+
+if __name__ == "__main__":
+    main()

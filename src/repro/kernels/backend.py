@@ -1,0 +1,65 @@
+"""Execution-backend selection for the vision/serving stack.
+
+Three ways to run the paper's operators:
+
+  * ``xla``            — the pure-XLA reference path (``repro.core.fuseconv``
+                         lax convolutions).  Always available; the
+                         correctness oracle for the others.
+  * ``pallas``         — the Pallas ``fuse1d``/``matmul`` kernels executed in
+                         ``interpret=True`` mode (Python semantics on CPU —
+                         this container has no TPU).
+  * ``pallas_tpu``     — the same kernels with ``interpret=False``; wired for
+                         real TPU hardware, do not select on CPU.
+
+A ``Backend`` is a frozen value object threaded through
+``repro.vision.zoo.apply_network`` (and anything else that executes
+operators) so a single flag flips the whole network between paths without
+re-tracing logic scattered across call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str                 # "xla" | "pallas"
+    interpret: bool = True    # only meaningful for the pallas kernels
+
+    def __post_init__(self):
+        assert self.name in ("xla", "pallas"), self.name
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.name == "pallas"
+
+    @property
+    def key(self) -> str:
+        """Stable string form (cache keys, CLI round-trips)."""
+        if self.name == "pallas":
+            return "pallas" if self.interpret else "pallas_tpu"
+        return "xla"
+
+
+XLA = Backend("xla")
+PALLAS = Backend("pallas", interpret=True)
+PALLAS_TPU = Backend("pallas", interpret=False)
+
+_BY_KEY = {"xla": XLA, "pallas": PALLAS, "pallas_interpret": PALLAS,
+           "pallas_tpu": PALLAS_TPU}
+
+BACKEND_KEYS = ("xla", "pallas", "pallas_tpu")
+
+
+def resolve_backend(spec: Union[str, Backend, None]) -> Backend:
+    """Accepts a Backend, one of BACKEND_KEYS, or None (-> XLA reference)."""
+    if spec is None:
+        return XLA
+    if isinstance(spec, Backend):
+        return spec
+    try:
+        return _BY_KEY[spec]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {spec!r}; expected one of {BACKEND_KEYS}")

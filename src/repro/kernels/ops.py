@@ -46,6 +46,20 @@ def fuse_conv1d_temporal(x: jax.Array, w: jax.Array, *, causal: bool = True,
     return y[:, :t, :]
 
 
+def _same_pad(extent: int, k: int, stride: int):
+    """XLA 'SAME' padding for a strided conv: (out_len, pad_lo, pad_hi).
+
+    XLA puts ``pad_total // 2`` on the low side; for stride > 1 over an even
+    extent that differs from the stride-1 centering, so the full-res-then-
+    subsample trick must pad with THIS split to stay bit-compatible with the
+    lax reference path.
+    """
+    out_len = -(-extent // stride)
+    pad_total = max(0, (out_len - 1) * stride + k - extent)
+    lo = pad_total // 2
+    return out_len, lo, pad_total - lo
+
+
 def fuse_conv2d_rows(x: jax.Array, w_row: jax.Array, *, stride: int = 1,
                      interpret: bool = True) -> jax.Array:
     """Kx1 (vertical) bank via fuse1d.  x: (B,H,W,C), w_row: (K,C)."""
@@ -53,11 +67,14 @@ def fuse_conv2d_rows(x: jax.Array, w_row: jax.Array, *, stride: int = 1,
     # conv along H: fold W into the problem axis -> (B*W, H, C)
     xt = x.transpose(0, 2, 1, 3).reshape(b * wdim, h, c)
     k = w_row.shape[0]
-    lo = (k - 1) // 2
-    x_pad = jnp.pad(xt, ((0, 0), (lo, k - 1 - lo), (0, 0)))
-    y = _fuse1d.fuse1d(x_pad, w_row, interpret=interpret)     # (B*W, H, C)
-    y = y.reshape(b, wdim, h, c).transpose(0, 2, 1, 3)
-    return y[:, ::stride, ::stride, :] if stride > 1 else y
+    out_h, lo, hi = _same_pad(h, k, stride)
+    x_pad = jnp.pad(xt, ((0, 0), (lo, hi), (0, 0)))
+    y = _fuse1d.fuse1d(x_pad, w_row, interpret=interpret)  # (B*W, T, C)
+    t = y.shape[1]
+    y = y.reshape(b, wdim, t, c).transpose(0, 2, 1, 3)
+    if stride > 1:
+        y = y[:, ::stride, ::stride, :]
+    return y[:, :out_h]
 
 
 def fuse_conv2d_cols(x: jax.Array, w_col: jax.Array, *, stride: int = 1,
@@ -66,11 +83,13 @@ def fuse_conv2d_cols(x: jax.Array, w_col: jax.Array, *, stride: int = 1,
     b, h, wdim, c = x.shape
     xt = x.reshape(b * h, wdim, c)
     k = w_col.shape[0]
-    lo = (k - 1) // 2
-    x_pad = jnp.pad(xt, ((0, 0), (lo, k - 1 - lo), (0, 0)))
+    out_w, lo, hi = _same_pad(wdim, k, stride)
+    x_pad = jnp.pad(xt, ((0, 0), (lo, hi), (0, 0)))
     y = _fuse1d.fuse1d(x_pad, w_col, interpret=interpret)
-    y = y.reshape(b, h, wdim, c)
-    return y[:, ::stride, ::stride, :] if stride > 1 else y
+    y = y.reshape(b, h, y.shape[1], c)
+    if stride > 1:
+        y = y[:, ::stride, ::stride, :]
+    return y[:, :, :out_w]
 
 
 def fuse_conv2d_half(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
@@ -80,6 +99,14 @@ def fuse_conv2d_half(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
                            interpret=interpret)
     y_c = fuse_conv2d_cols(x[..., c_r:], w_col, stride=stride,
                            interpret=interpret)
+    return jnp.concatenate([y_r, y_c], axis=-1)
+
+
+def fuse_conv2d_full(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
+                     stride: int = 1, interpret: bool = True) -> jax.Array:
+    """FuSe-Full: every channel gets a row AND a column filter -> 2C out."""
+    y_r = fuse_conv2d_rows(x, w_row, stride=stride, interpret=interpret)
+    y_c = fuse_conv2d_cols(x, w_col, stride=stride, interpret=interpret)
     return jnp.concatenate([y_r, y_c], axis=-1)
 
 

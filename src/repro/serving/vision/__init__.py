@@ -1,0 +1,31 @@
+"""Batched FuSeConv vision serving (engine, registry, batcher, cost model).
+
+Quick start::
+
+    from repro.serving.vision import ModelRegistry, VisionServeEngine
+    from repro.vision import zoo
+
+    reg = ModelRegistry(backend="pallas")          # or "xla" / "pallas_tpu"
+    reg.register(zoo.tiny_net(), "fuse_full")
+    engine = VisionServeEngine(reg)
+    rid = engine.submit("tiny_net/fuse_full", image)  # (H, W, 3) any size
+    results = engine.flush()
+
+See docs/serving_vision.md for the architecture sketch.
+"""
+from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
+                                          RequestQueue, VisionRequest,
+                                          fit_image, form_batch)
+from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
+from repro.serving.vision.engine import VisionResult, VisionServeEngine
+from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
+from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
+                                           default_model_key)
+from repro.serving.vision.traffic import submit_mixed_burst
+
+__all__ = [
+    "Batch", "BucketPlan", "DEFAULT_BUCKETS", "LatencyStat", "ModelRegistry",
+    "RegisteredModel", "RequestQueue", "ServeMetrics", "SystolicCostModel",
+    "VisionRequest", "VisionResult", "VisionServeEngine", "default_model_key",
+    "fit_image", "form_batch", "percentile", "submit_mixed_burst",
+]

@@ -1,0 +1,103 @@
+"""Request queue + batch formation for the vision serving engine.
+
+Requests arrive with arbitrary image sizes; each model executes at a fixed
+resolution and a fixed set of batch "buckets" (powers of two by default).
+The batcher (a) letterboxes every image to the model's resolution, (b)
+groups requests per model in FIFO order, and (c) pads each formed batch up
+to the chosen bucket so the jit cache sees only |models| x |buckets|
+distinct shapes — no recompiles under mixed traffic.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def fit_image(img: np.ndarray, resolution: int) -> np.ndarray:
+    """Letterbox an (H, W, C) image to (resolution, resolution, C).
+
+    Smaller extents are zero-padded symmetrically; larger extents are
+    center-cropped.  Deterministic, preserves dtype, never interpolates
+    (serving must not silently change pixel values).
+    """
+    assert img.ndim == 3, img.shape
+    h, w, c = img.shape
+    out = img
+    # crop first (center), then pad (center)
+    if h > resolution:
+        top = (h - resolution) // 2
+        out = out[top:top + resolution]
+    if w > resolution:
+        left = (w - resolution) // 2
+        out = out[:, left:left + resolution]
+    ph = resolution - out.shape[0]
+    pw = resolution - out.shape[1]
+    if ph or pw:
+        out = np.pad(out, ((ph // 2, ph - ph // 2),
+                           (pw // 2, pw - pw // 2), (0, 0)))
+    return out
+
+
+@dataclasses.dataclass
+class VisionRequest:
+    rid: int
+    model: str
+    image: np.ndarray            # (H, W, C), any H/W
+    t_submit: float
+    slo_ms: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Batch:
+    model: str
+    requests: List[VisionRequest]
+    images: np.ndarray           # (bucket, res, res, C) — padded
+    bucket: int
+
+    @property
+    def fill(self) -> int:
+        return len(self.requests)
+
+
+class RequestQueue:
+    """Per-model FIFO queues with a global arrival order."""
+
+    def __init__(self):
+        self._queues: Dict[str, Deque[VisionRequest]] = {}
+
+    def push(self, req: VisionRequest) -> None:
+        self._queues.setdefault(req.model, collections.deque()).append(req)
+
+    def pending(self, model: Optional[str] = None) -> int:
+        if model is not None:
+            return len(self._queues.get(model, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def models_with_work(self) -> List[str]:
+        """Models ordered by their oldest queued request (FIFO fairness)."""
+        live = [(q[0].t_submit, m) for m, q in self._queues.items() if q]
+        return [m for _, m in sorted(live)]
+
+    def pop(self, model: str, n: int) -> List[VisionRequest]:
+        q = self._queues[model]
+        out = [q.popleft() for _ in range(min(n, len(q)))]
+        return out
+
+
+def form_batch(requests: List[VisionRequest], bucket: int,
+               resolution: int) -> Batch:
+    """Stack fitted images and zero-pad the batch axis up to ``bucket``."""
+    assert 1 <= len(requests) <= bucket, (len(requests), bucket)
+    fitted = [fit_image(np.asarray(r.image, np.float32), resolution)
+              for r in requests]
+    images = np.stack(fitted)
+    pad = bucket - images.shape[0]
+    if pad:
+        images = np.concatenate(
+            [images, np.zeros((pad,) + images.shape[1:], images.dtype)])
+    return Batch(requests[0].model, list(requests), images, bucket)

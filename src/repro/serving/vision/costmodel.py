@@ -1,0 +1,102 @@
+"""Cost model: ST-OS systolic latency estimates driving scheduling decisions.
+
+The systolic simulator (``repro.systolic.simulator``) gives a per-network,
+per-batch latency estimate for the paper's accelerator — for free, from the
+same operator IR the counting/benchmark stack uses.  The serving engine
+uses it three ways:
+
+  * bucket selection — among the fixed batch buckets, run the one that
+    maximizes delivered images per predicted millisecond (padding a batch
+    to a bigger bucket is wasted compute; a too-small bucket leaves queued
+    work waiting for another pass);
+  * admission control — a request with an SLO is rejected up front when the
+    predicted time to drain the queue ahead of it (plus its own batch)
+    already exceeds the SLO;
+  * reporting — predicted vs measured latency per batch (the cost model's
+    calibration error is itself a serving metric).
+
+Simulator calls are memoized per (model key, batch): the IR never changes
+after registration, so each point is simulated at most once per process.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.systolic.arrays import PAPER_CONFIG, SystolicConfig
+from repro.systolic.simulator import NetworkSim, simulate_network
+
+from repro.serving.vision.registry import RegisteredModel
+
+
+@dataclasses.dataclass
+class BucketPlan:
+    bucket: int
+    served: int                  # requests actually in the batch
+    predicted_ms: float          # simulator latency for the whole batch
+
+    @property
+    def imgs_per_ms(self) -> float:
+        return self.served / self.predicted_ms if self.predicted_ms else 0.0
+
+
+class SystolicCostModel:
+    def __init__(self, cfg: SystolicConfig = PAPER_CONFIG, *,
+                 stos: bool = True, baseline_dataflow: str = "OS"):
+        self.cfg = cfg
+        self.stos = stos
+        self.baseline_dataflow = baseline_dataflow
+        self._cache: Dict[Tuple[str, int], float] = {}
+
+    # -- latency ------------------------------------------------------------
+    def simulate(self, model: RegisteredModel, batch: int) -> NetworkSim:
+        return simulate_network(model.ir, self.cfg, stos=self.stos,
+                                baseline_dataflow=self.baseline_dataflow,
+                                batch=batch, name=model.key)
+
+    def predicted_ms(self, model: RegisteredModel, batch: int) -> float:
+        key = (model.key, batch)
+        if key not in self._cache:
+            self._cache[key] = self.simulate(model, batch).latency_ms
+        return self._cache[key]
+
+    # -- scheduling ---------------------------------------------------------
+    def plan_bucket(self, model: RegisteredModel, queued: int,
+                    buckets: Sequence[int]) -> BucketPlan:
+        """Best bucket for ``queued`` waiting requests of one model.
+
+        Maximizes delivered images per predicted ms; ties break toward the
+        smaller bucket (less padded compute, lower batch latency).
+        """
+        assert queued >= 1
+        best: Optional[BucketPlan] = None
+        for b in sorted(buckets):
+            plan = BucketPlan(b, min(queued, b), self.predicted_ms(model, b))
+            if best is None or plan.imgs_per_ms > best.imgs_per_ms * (1 + 1e-9):
+                best = plan
+        assert best is not None
+        return best
+
+    def drain_ms(self, model: RegisteredModel, queued: int,
+                 buckets: Sequence[int]) -> float:
+        """Predicted time to serve ``queued`` requests with greedy batching."""
+        total = 0.0
+        remaining = queued
+        while remaining > 0:
+            plan = self.plan_bucket(model, remaining, buckets)
+            total += plan.predicted_ms
+            remaining -= plan.served
+        return total
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, model: RegisteredModel, slo_ms: Optional[float],
+              queued: int, buckets: Sequence[int],
+              backlog_ms: float = 0.0) -> Tuple[bool, float]:
+        """(admit?, predicted e2e ms) for a request arriving behind
+        ``queued`` same-model requests and ``backlog_ms`` of predicted
+        other-model work the FIFO scheduler will serve first.  No SLO ->
+        always admitted."""
+        predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
+        if slo_ms is None:
+            return True, predicted
+        return predicted <= slo_ms, predicted

@@ -1,0 +1,155 @@
+"""VisionServeEngine: batched FuSeConv inference with cost-model scheduling.
+
+Request lifecycle:
+
+  submit(model, image[, slo_ms])
+      -> admission check (systolic cost model predicts e2e latency behind
+         the current queue; SLO'd requests that cannot make it are rejected
+         immediately instead of clogging the queue)
+      -> FIFO queue, per model
+  flush()
+      -> repeatedly: pick the model with the oldest waiting request, ask
+         the cost model for the best batch bucket (max delivered images per
+         predicted ms), form a padded batch, run the jit-cached apply,
+         slice out per-request logits, account latencies
+      -> returns completed ``VisionResult``s in request order
+
+The engine is backend-agnostic: the registry decides whether a model runs
+the XLA reference path or the Pallas kernels (interpret on CPU, compiled on
+TPU).  All scheduling state is host-side and deterministic given the
+submission order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.serving.vision.batcher import (DEFAULT_BUCKETS, RequestQueue,
+                                          VisionRequest, form_batch)
+from repro.serving.vision.costmodel import SystolicCostModel
+from repro.serving.vision.metrics import ServeMetrics
+from repro.serving.vision.registry import ModelRegistry
+
+
+@dataclasses.dataclass
+class VisionResult:
+    rid: int
+    model: str
+    status: str                       # "ok" | "rejected"
+    logits: Optional[np.ndarray]      # (num_classes,) for "ok"
+    predicted_ms: float               # cost-model estimate at decision time
+    queue_ms: float = 0.0
+    run_ms: float = 0.0               # measured batch compute (whole batch)
+    e2e_ms: float = 0.0
+    bucket: int = 0
+    batch_fill: int = 0
+
+
+class VisionServeEngine:
+    def __init__(self, registry: ModelRegistry, *,
+                 cost_model: Optional[SystolicCostModel] = None,
+                 metrics: Optional[ServeMetrics] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 clock=time.perf_counter):
+        self.registry = registry
+        self.cost_model = cost_model or SystolicCostModel()
+        self.buckets = tuple(sorted(buckets))
+        self.metrics = metrics or ServeMetrics(clock)
+        self._clock = clock
+        self._queue = RequestQueue()
+        self._results: Dict[int, VisionResult] = {}
+        self._next_rid = 0
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, model_key: str, image: np.ndarray,
+               slo_ms: Optional[float] = None) -> int:
+        """Enqueue one image; returns its request id.
+
+        With an SLO, the request is subject to admission control: if the
+        cost model predicts the queue ahead of it plus its own batch already
+        blows the budget, it is rejected now (result status "rejected")."""
+        model = self.registry.get(model_key)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.metrics.on_submit()
+        if slo_ms is not None:
+            # The scheduler drains models in global FIFO order, so a request
+            # waits behind every OTHER model's queued work too — charge it.
+            backlog_ms = sum(
+                self.cost_model.drain_ms(self.registry.get(m),
+                                         self._queue.pending(m), self.buckets)
+                for m in self._queue.models_with_work() if m != model_key)
+            admitted, predicted = self.cost_model.admit(
+                model, slo_ms, self._queue.pending(model_key), self.buckets,
+                backlog_ms)
+            if not admitted:
+                self.metrics.on_reject()
+                self._results[rid] = VisionResult(rid, model_key, "rejected",
+                                                  None, predicted)
+                return rid
+        self._queue.push(VisionRequest(rid, model_key, np.asarray(image),
+                                       self._clock(), slo_ms))
+        return rid
+
+    # -- scheduling / execution ---------------------------------------------
+    def warmup(self, keys: Optional[Sequence[str]] = None,
+               buckets: Optional[Sequence[int]] = None) -> None:
+        """Pre-compile every (model, bucket) pair off the serving path."""
+        for k in (keys if keys is not None else self.registry.keys()):
+            self.registry.warmup(k, buckets if buckets is not None
+                                 else self.buckets)
+
+    def step(self) -> List[VisionResult]:
+        """Run ONE batch (the scheduler's pick); [] if nothing is queued."""
+        models = self._queue.models_with_work()
+        if not models:
+            return []
+        model_key = models[0]                      # oldest waiting request
+        model = self.registry.get(model_key)
+        plan = self.cost_model.plan_bucket(
+            model, self._queue.pending(model_key), self.buckets)
+        reqs = self._queue.pop(model_key, plan.served)
+        batch = form_batch(reqs, plan.bucket, model.resolution)
+
+        t0 = self._clock()
+        logits = self.registry.apply(model_key, batch.images)
+        jax.block_until_ready(logits)
+        t1 = self._clock()
+        run_ms = (t1 - t0) * 1e3
+        self.metrics.on_batch(model_key, batch.fill, plan.bucket, run_ms,
+                              plan.predicted_ms)
+
+        logits_np = np.asarray(logits)
+        out: List[VisionResult] = []
+        for i, r in enumerate(reqs):
+            e2e_ms = (t1 - r.t_submit) * 1e3
+            res = VisionResult(
+                rid=r.rid, model=model_key, status="ok",
+                logits=logits_np[i], predicted_ms=plan.predicted_ms,
+                queue_ms=(t0 - r.t_submit) * 1e3, run_ms=run_ms,
+                e2e_ms=e2e_ms, bucket=plan.bucket, batch_fill=batch.fill)
+            self._results[r.rid] = res
+            self.metrics.on_complete(model_key, e2e_ms)
+            out.append(res)
+        return out
+
+    def flush(self) -> List[VisionResult]:
+        """Drain the queue, then hand back (and clear) finished results."""
+        while self._queue.pending():
+            self.step()
+        done = [self._results[rid] for rid in sorted(self._results)]
+        self._results.clear()
+        return done
+
+    def generate(self, items: Sequence[Union[Tuple[str, np.ndarray],
+                                             Tuple[str, np.ndarray, float]]]
+                 ) -> List[VisionResult]:
+        """Submit (model_key, image[, slo_ms]) items, flush, return results
+        in submission order."""
+        for item in items:
+            self.submit(*item)
+        return self.flush()

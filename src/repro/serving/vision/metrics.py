@@ -1,0 +1,109 @@
+"""Serving metrics: counters + latency distributions (p50/p99, throughput).
+
+Pure-Python accounting (no jax): every number here is host-side bookkeeping
+around the jitted compute, so importing this module never touches a device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    rank = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
+    return xs[rank]
+
+
+@dataclasses.dataclass
+class LatencyStat:
+    samples: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, ms: float) -> None:
+        self.samples.append(float(ms))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    def p(self, q: float) -> float:
+        return percentile(self.samples, q)
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "mean_ms": self.mean,
+                "p50_ms": self.p(50), "p99_ms": self.p(99)}
+
+
+class ServeMetrics:
+    """Engine-wide counters + per-model latency distributions."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t_start: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self.submitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.batches = 0
+        self.padded_slots = 0          # wasted compute from bucket padding
+        self.e2e = {}                  # model -> LatencyStat (submit -> done)
+        self.run = {}                  # model -> LatencyStat (batch compute)
+        self.cost_model_err = LatencyStat()   # |predicted - measured| in ms
+
+    def _stat(self, table: Dict[str, LatencyStat], model: str) -> LatencyStat:
+        if model not in table:
+            table[model] = LatencyStat()
+        return table[model]
+
+    def on_submit(self) -> None:
+        self.submitted += 1
+        if self._t_start is None:
+            self._t_start = self._clock()
+
+    def on_reject(self) -> None:
+        self.rejected += 1
+
+    def on_batch(self, model: str, served: int, bucket: int,
+                 run_ms: float, predicted_ms: float) -> None:
+        self.batches += 1
+        self.padded_slots += bucket - served
+        self._stat(self.run, model).record(run_ms)
+        self.cost_model_err.record(abs(predicted_ms - run_ms))
+        self._t_last = self._clock()
+
+    def on_complete(self, model: str, e2e_ms: float) -> None:
+        self.completed += 1
+        self._stat(self.e2e, model).record(e2e_ms)
+
+    @property
+    def wall_s(self) -> float:
+        if self._t_start is None or self._t_last is None:
+            return 0.0
+        return max(self._t_last - self._t_start, 0.0)
+
+    @property
+    def throughput_ips(self) -> float:
+        """Completed images per wall-clock second (0 until a batch ran)."""
+        wall = self.wall_s
+        return self.completed / wall if wall > 0 else 0.0
+
+    def snapshot(self) -> Dict:
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "batches": self.batches,
+            "padded_slots": self.padded_slots,
+            "throughput_ips": self.throughput_ips,
+            "e2e": {m: s.summary() for m, s in self.e2e.items()},
+            "run": {m: s.summary() for m, s in self.run.items()},
+            "cost_model_abs_err_ms": self.cost_model_err.summary(),
+        }

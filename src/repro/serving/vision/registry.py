@@ -1,0 +1,116 @@
+"""Model registry: zoo networks x FuSe variants, jit-cached per batch bucket.
+
+A ``RegisteredModel`` bundles everything the engine and cost model need for
+one servable entry: the ``NetworkDef``, the spatial-operator variant, the
+initialized (or loaded) params, the lowered operator IR (for the systolic
+cost model), and the execution backend.  ``ModelRegistry.apply`` dispatches
+through a jit cache keyed by ``(model key, batch bucket)`` so every bucket
+compiles exactly once and mixed traffic never re-traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layerir import OpSpec
+from repro.kernels import backend as kb
+from repro.vision import zoo
+
+
+@dataclasses.dataclass
+class RegisteredModel:
+    key: str
+    net: zoo.NetworkDef
+    variant: Union[str, tuple]
+    params: list
+    ir: List[OpSpec]
+    backend: kb.Backend
+
+    @property
+    def resolution(self) -> int:
+        return self.net.resolution
+
+    @property
+    def num_classes(self) -> int:
+        head = self.net.blocks[-1]
+        assert isinstance(head, zoo.Head), head
+        return head.classes
+
+
+def default_model_key(net_name: str, variant: Union[str, tuple]) -> str:
+    v = variant if isinstance(variant, str) else "hybrid"
+    return f"{net_name}/{v}"
+
+
+class ModelRegistry:
+    """Servable models + the (key, bucket) -> jitted-apply cache."""
+
+    def __init__(self, backend: Union[str, kb.Backend, None] = None):
+        self.backend = kb.resolve_backend(backend)
+        self._models: Dict[str, RegisteredModel] = {}
+        self._jit: Dict[Tuple[str, int], Callable] = {}
+
+    # -- registration -------------------------------------------------------
+    def register(self, net: zoo.NetworkDef, variant: Union[str, tuple]
+                 = "depthwise", *, key: Optional[str] = None,
+                 params: Optional[list] = None, seed: int = 0,
+                 backend: Union[str, kb.Backend, None] = None
+                 ) -> RegisteredModel:
+        k = key or default_model_key(net.name, variant)
+        assert k not in self._models, f"duplicate model key {k!r}"
+        if params is None:
+            params = zoo.init_network(jax.random.PRNGKey(seed), net, variant)
+        bk = self.backend if backend is None else kb.resolve_backend(backend)
+        model = RegisteredModel(k, net, variant, params,
+                                zoo.lower_to_ir(net, variant), bk)
+        self._models[k] = model
+        return model
+
+    def get(self, key: str) -> RegisteredModel:
+        return self._models[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._models
+
+    def keys(self) -> List[str]:
+        return list(self._models)
+
+    # -- execution ----------------------------------------------------------
+    def _build_apply(self, model: RegisteredModel) -> Callable:
+        net, variant, backend = model.net, model.variant, model.backend
+
+        def apply(params, images):
+            logits, _ = zoo.apply_network(params, net, images, variant,
+                                          train=False, backend=backend)
+            return logits
+
+        return jax.jit(apply)
+
+    def apply_fn(self, key: str, bucket: int) -> Callable:
+        """The jitted apply for one (model, batch-bucket) shape class."""
+        cache_key = (key, bucket)
+        if cache_key not in self._jit:
+            self._jit[cache_key] = self._build_apply(self._models[key])
+        return self._jit[cache_key]
+
+    def apply(self, key: str, images) -> jax.Array:
+        """images: (bucket, res, res, C) — must already be bucket-padded."""
+        model = self._models[key]
+        bucket = images.shape[0]
+        x = jnp.asarray(images)
+        return self.apply_fn(key, bucket)(model.params, x)
+
+    def warmup(self, key: str, buckets) -> None:
+        """Pre-compile one apply per bucket (trace + compile off hot path)."""
+        model = self._models[key]
+        res, cin = model.resolution, model.net.in_channels
+        for b in buckets:
+            out = self.apply(key, np.zeros((b, res, res, cin), np.float32))
+            jax.block_until_ready(out)
+
+    def compiled_buckets(self) -> List[Tuple[str, int]]:
+        return sorted(self._jit)

@@ -1,0 +1,29 @@
+"""Synthetic traffic generation shared by the example, launcher, and bench.
+
+One canonical mixed burst: round-robin across the registry's models, image
+extents drawn uniformly from [res/2, 2*res) so every request exercises the
+batcher's letterboxing, pixels standard-normal.  Deterministic per seed.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def submit_mixed_burst(engine, n: int, *, seed: int = 0,
+                       slo_ms: Optional[float] = None
+                       ) -> List[Tuple[int, str, np.ndarray]]:
+    """Submit ``n`` mixed-size requests; returns [(rid, model key, image)]."""
+    rng = np.random.default_rng(seed)
+    keys = engine.registry.keys()
+    out: List[Tuple[int, str, np.ndarray]] = []
+    for i in range(n):
+        key = keys[i % len(keys)]
+        res = engine.registry.get(key).resolution
+        h = int(rng.integers(res // 2, res * 2))
+        w = int(rng.integers(res // 2, res * 2))
+        img = rng.standard_normal((h, w, 3), dtype=np.float32)
+        rid = engine.submit(key, img, slo_ms=slo_ms)
+        out.append((rid, key, img))
+    return out

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 from repro.core import fuseconv as fc
 from repro.core.layerir import OpSpec
+from repro.kernels import backend as kb
+from repro.kernels import ops as kops
 from repro.vision import layers as L
 
 Array = jax.Array
@@ -232,9 +234,38 @@ def init_network(key: Array, net: NetworkDef, variant="depthwise",
     return params
 
 
+def _apply_spatial(p: dict, spec: fc.SpatialOpSpec, x: Array,
+                   backend: kb.Backend) -> Array:
+    """Spatial stage on the selected backend.
+
+    The Pallas path covers the FuSe variants (the operators the paper
+    accelerates); depthwise/scaffold stages have no Pallas kernel and always
+    run the XLA reference — exactly the hardware story: FuSe 1-D banks get
+    the custom dataflow, the baseline op does not.
+    """
+    if backend.use_pallas and spec.variant in ("fuse_half", "fuse_full"):
+        f = (kops.fuse_conv2d_half if spec.variant == "fuse_half"
+             else kops.fuse_conv2d_full)
+        return f(x, p["row"], p["col"], stride=spec.stride,
+                 interpret=backend.interpret)
+    return fc.apply_spatial_op(p, spec, x)
+
+
+def _pointwise(x: Array, w: Array, backend: kb.Backend) -> Array:
+    if backend.use_pallas:
+        return kops.pointwise(x, w, interpret=backend.interpret)
+    return fc.pointwise_conv2d(x, w)
+
+
 def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
-                  *, train: bool = False):
-    """Returns (logits, new_params) — new_params only differs in BN stats."""
+                  *, train: bool = False, backend=None):
+    """Returns (logits, new_params) — new_params only differs in BN stats.
+
+    ``backend`` selects the execution path for the FuSe spatial stages and
+    all 1x1 pointwise convs: None/"xla" (lax reference), "pallas"
+    (interpret-mode kernels on CPU), or "pallas_tpu" (interpret=False).
+    """
+    bk = kb.resolve_backend(backend)
     variants = _variant_list(net, variant)
     new_params: list = []
     vi = 0
@@ -249,10 +280,10 @@ def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
         elif isinstance(b, DWSep):
             v = variants[vi]; vi += 1
             spec = fc.SpatialOpSpec(v, b.kernel, c, b.stride)
-            x = fc.apply_spatial_op(p["sp"], spec, x)
+            x = _apply_spatial(p["sp"], spec, x, bk)
             x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
             x = L.ACTS[b.act](x)
-            x = fc.pointwise_conv2d(x, p["pw"])
+            x = _pointwise(x, p["pw"], bk)
             x, np_["bn2"] = L.apply_bn(p["bn2"], x, train=train)
             x = L.ACTS[b.act](x)
             c = b.cout
@@ -261,23 +292,23 @@ def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
             shortcut = x
             cin = c
             if b.exp != cin:
-                x = fc.pointwise_conv2d(x, p["expand"])
+                x = _pointwise(x, p["expand"], bk)
                 x, np_["bn0"] = L.apply_bn(p["bn0"], x, train=train)
                 x = L.ACTS[b.act](x)
             spec = fc.SpatialOpSpec(v, b.kernel, b.exp, b.stride)
-            x = fc.apply_spatial_op(p["sp"], spec, x)
+            x = _apply_spatial(p["sp"], spec, x, bk)
             x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
             x = L.ACTS[b.act](x)
             if b.se:
                 x = L.apply_se(p["se"], x)
-            x = fc.pointwise_conv2d(x, p["project"])
+            x = _pointwise(x, p["project"], bk)
             x, np_["bn2"] = L.apply_bn(p["bn2"], x, train=train)
             if b.stride == 1 and cin == b.cout:
                 x = x + shortcut
             c = b.cout
         elif isinstance(b, ConvBN):
             if b.kernel == 1:
-                x = fc.pointwise_conv2d(x, p["w"])
+                x = _pointwise(x, p["w"], bk)
             else:
                 x = fc.conv2d(x, p["w"], stride=b.stride)
             x, np_["bn"] = L.apply_bn(p["bn"], x, train=train)

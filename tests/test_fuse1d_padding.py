@@ -1,0 +1,78 @@
+"""fuse1d channel-padding edges: C not a multiple of block_c, block_c
+overrides, and the strided 2-D wrappers' SAME-padding parity with XLA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fuseconv as fc
+from repro.kernels import ops, ref
+from repro.kernels.fuse1d import DEFAULT_BLOCK_C, fuse1d
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("c", [1, 5, 127, 128, 129, 130, 257])
+def test_fuse1d_channel_padding_edges(c):
+    """C below / straddling / above the 128-lane block must all slice back
+    to exact reference output."""
+    n, t, k = 2, 9, 3
+    x = jax.random.normal(KEY, (n, t + k - 1, c))
+    w = jax.random.normal(KEY, (k, c))
+    y = fuse1d(x, w)
+    assert y.shape == (n, t, c)
+    np.testing.assert_allclose(y, ref.fuse1d_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,block_c", [
+    (5, 8),      # block clamps to C
+    (5, 2),      # C=5 not a multiple of block 2 -> pad 1 channel
+    (130, 64),   # 130 = 2*64 + 2 -> pad 62
+    (130, 128),  # default-block straddle: pad 126
+    (130, 130),  # exact fit
+    (256, 32),   # many blocks, no padding
+])
+def test_fuse1d_block_c_overrides(c, block_c):
+    n, t, k = 1, 12, 5
+    x = jax.random.normal(KEY, (n, t + k - 1, c))
+    w = jax.random.normal(KEY, (k, c))
+    y = fuse1d(x, w, block_c=block_c)
+    assert y.shape == (n, t, c)
+    np.testing.assert_allclose(y, ref.fuse1d_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_fuse1d_padding_dtype_preserved():
+    x = jax.random.normal(KEY, (1, 10, 5)).astype(jnp.bfloat16)
+    w = jax.random.normal(KEY, (3, 5)).astype(jnp.bfloat16)
+    y = fuse1d(x, w, block_c=4)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref.fuse1d_ref(x, w), np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_default_block_is_lane_width():
+    assert DEFAULT_BLOCK_C == 128
+
+
+@pytest.mark.parametrize("h,w,k,stride", [
+    (32, 32, 3, 2),   # even extent + stride 2: XLA SAME pads low=0 (the
+    (16, 14, 5, 2),   # case the old stride-1-centering subsample got wrong)
+    (8, 8, 3, 2),
+    (12, 12, 3, 3),
+    (13, 11, 5, 2),   # odd extents (previously-covered behavior)
+])
+def test_strided_fuse2d_matches_xla_same(h, w, k, stride):
+    x = jax.random.normal(KEY, (2, h, w, 6))
+    wr = jax.random.normal(KEY, (k, 3))
+    wc = jax.random.normal(KEY, (k, 3))
+    y_pal = ops.fuse_conv2d_half(x, wr, wc, stride=stride)
+    y_ref = fc.fuse_conv2d_half(x, wr, wc, stride=stride)
+    assert y_pal.shape == y_ref.shape
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)
+    wrf = jax.random.normal(KEY, (k, 6))
+    wcf = jax.random.normal(KEY, (k, 6))
+    y_pal = ops.fuse_conv2d_full(x, wrf, wcf, stride=stride)
+    y_ref = fc.fuse_conv2d_full(x, wrf, wcf, stride=stride)
+    assert y_pal.shape == y_ref.shape
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-5, atol=1e-5)

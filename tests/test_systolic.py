@@ -2,7 +2,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.layerir import OpSpec
 from repro.systolic import dataflow as df
