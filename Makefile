@@ -1,18 +1,25 @@
 # One-command checks for every PR.
-#   make test        — tier-1 pytest suite
+#   make test        — tier-1 pytest suite (includes the slow conformance grids)
+#   make test-fast   — tier-1 minus tests marked `slow` (inner-loop runs)
 #   make bench-smoke — tiny vision-serve benchmark (writes BENCH_serve.json)
+#   make ci          — the full PR gate: test + bench-smoke
 #   make serve-demo  — end-to-end serving example on the Pallas backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke serve-demo
+.PHONY: test test-fast bench-smoke ci serve-demo
 
 test:
 	$(PY) -m pytest -x -q
 
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
 bench-smoke:
 	$(PY) -m benchmarks.run serve --json BENCH_serve.json
+
+ci: test bench-smoke
 
 serve-demo:
 	$(PY) examples/serve_vision.py

@@ -7,6 +7,12 @@
 ``--models`` entries are ``<zoo name>/<variant>``; ``tiny_net`` plus every
 network in ``repro.vision.zoo.ZOO`` is accepted.  ``--resolution`` overrides
 the network's native input size (tiny configs for CPU smoke runs).
+
+The engine runs its async pipelined executor by default (host batching of
+batch N+1 overlapped with device execution of batch N); ``--sync`` selects
+the synchronous drain-on-caller path for comparison.  ``--warm-bursts``
+replays the burst before the measured pass so the latency calibrator has
+enough observations for SLO admission to operate in calibrated wall-ms.
 """
 from __future__ import annotations
 
@@ -38,8 +44,18 @@ def main(argv=None):
                     help="override network input resolution (0 = native)")
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--slo-ms", type=float, default=None,
-                    help="per-request SLO for admission control (cost-model"
-                         " milliseconds on the paper's accelerator)")
+                    help="per-request SLO for admission control (calibrated"
+                         " wall-ms once the calibrator converges,"
+                         " accelerator-ms before)")
+    ap.add_argument("--sync", action="store_true",
+                    help="drain synchronously on the caller's thread instead"
+                         " of the pipelined executor")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="pipelined executor's bound on outstanding batches")
+    ap.add_argument("--warm-bursts", type=int, default=0,
+                    help="unmeasured bursts replayed first to feed the"
+                         " latency calibrator")
+    ap.add_argument("--min-calibration-samples", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write the metrics snapshot to this path")
@@ -47,8 +63,9 @@ def main(argv=None):
 
     import numpy as np
 
-    from repro.serving.vision import (ModelRegistry, SystolicCostModel,
-                                      VisionServeEngine, submit_mixed_burst)
+    from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
+                                      SystolicCostModel, VisionServeEngine,
+                                      submit_mixed_burst)
 
     registry = ModelRegistry(backend=args.backend)
     for entry in args.models:
@@ -60,23 +77,38 @@ def main(argv=None):
         net = build_network(name, args.resolution)
         registry.register(net, variant, key=entry)
 
-    engine = VisionServeEngine(registry, cost_model=SystolicCostModel(),
-                               buckets=args.buckets)
+    calibrator = LatencyCalibrator(min_samples=args.min_calibration_samples)
+    engine = VisionServeEngine(
+        registry, cost_model=SystolicCostModel(calibrator=calibrator),
+        buckets=args.buckets, pipelined=not args.sync,
+        max_in_flight=args.max_in_flight)
     engine.warmup()
+
+    for i in range(args.warm_bursts):
+        submit_mixed_burst(engine, args.requests, seed=args.seed + 1 + i)
+        engine.flush()
+    if args.warm_bursts:
+        # warm traffic fed the calibrator; the reported snapshot should
+        # describe only the measured burst
+        engine.metrics.reset()
 
     submit_mixed_burst(engine, args.requests, seed=args.seed,
                        slo_ms=args.slo_ms)
     results = engine.flush()
     for r in results:
         top1 = int(np.argmax(r.logits)) if r.logits is not None else -1
+        unit = "cal-ms" if r.calibrated else "acc-ms"
         print(f"req {r.rid:3d} {r.model:28s} {r.status:8s} top1={top1:4d} "
-              f"bucket={r.bucket} predicted={r.predicted_ms:8.3f}ms "
+              f"bucket={r.bucket} predicted={r.predicted_ms:8.3f}{unit} "
               f"measured_run={r.run_ms:8.2f}ms e2e={r.e2e_ms:8.2f}ms")
     snap = engine.metrics.snapshot()
+    snap["calibration"] = calibrator.snapshot()
+    snap["mode"] = "sync" if args.sync else "pipelined"
     print(json.dumps(snap, indent=2, sort_keys=True))
     if args.json_path:
         with open(args.json_path, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
+    engine.close()
 
 
 if __name__ == "__main__":

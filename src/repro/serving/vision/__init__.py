@@ -16,16 +16,22 @@ See docs/serving_vision.md for the architecture sketch.
 from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
                                           fit_image, form_batch)
+from repro.serving.vision.calibrate import LatencyCalibrator
 from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
-from repro.serving.vision.engine import VisionResult, VisionServeEngine
+from repro.serving.vision.engine import (VisionFuture, VisionResult,
+                                         VisionServeEngine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
                                            default_model_key)
-from repro.serving.vision.traffic import submit_mixed_burst
+from repro.serving.vision.traffic import (make_mixed_burst, stream_items,
+                                          stream_mixed_burst,
+                                          submit_mixed_burst)
 
 __all__ = [
-    "Batch", "BucketPlan", "DEFAULT_BUCKETS", "LatencyStat", "ModelRegistry",
-    "RegisteredModel", "RequestQueue", "ServeMetrics", "SystolicCostModel",
-    "VisionRequest", "VisionResult", "VisionServeEngine", "default_model_key",
-    "fit_image", "form_batch", "percentile", "submit_mixed_burst",
+    "Batch", "BucketPlan", "DEFAULT_BUCKETS", "LatencyCalibrator",
+    "LatencyStat", "ModelRegistry", "RegisteredModel", "RequestQueue",
+    "ServeMetrics", "SystolicCostModel", "VisionFuture", "VisionRequest",
+    "VisionResult", "VisionServeEngine", "default_model_key", "fit_image",
+    "form_batch", "make_mixed_burst", "percentile", "stream_items",
+    "stream_mixed_burst", "submit_mixed_burst",
 ]

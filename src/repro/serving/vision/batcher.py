@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,28 +66,53 @@ class Batch:
 
 
 class RequestQueue:
-    """Per-model FIFO queues with a global arrival order."""
+    """Per-model FIFO queues with a global arrival order.
+
+    Thread-safe: the pipelined engine pushes from caller threads while its
+    scheduler thread plans and pops, so every accessor holds one lock.
+    ``snapshot_oldest`` exists so the scheduler can pick (model, depth) in a
+    single atomic read instead of racing ``models_with_work`` + ``pending``.
+    """
 
     def __init__(self):
         self._queues: Dict[str, Deque[VisionRequest]] = {}
+        self._lock = threading.Lock()
 
     def push(self, req: VisionRequest) -> None:
-        self._queues.setdefault(req.model, collections.deque()).append(req)
+        with self._lock:
+            self._queues.setdefault(req.model,
+                                    collections.deque()).append(req)
 
     def pending(self, model: Optional[str] = None) -> int:
-        if model is not None:
-            return len(self._queues.get(model, ()))
-        return sum(len(q) for q in self._queues.values())
+        with self._lock:
+            if model is not None:
+                return len(self._queues.get(model, ()))
+            return sum(len(q) for q in self._queues.values())
 
     def models_with_work(self) -> List[str]:
         """Models ordered by their oldest queued request (FIFO fairness)."""
-        live = [(q[0].t_submit, m) for m, q in self._queues.items() if q]
+        with self._lock:
+            live = [(q[0].t_submit, m) for m, q in self._queues.items() if q]
         return [m for _, m in sorted(live)]
 
+    def snapshot(self) -> List[Tuple[str, int, float]]:
+        """One atomic read of every model with queued work, ordered by the
+        age of its oldest waiting request (global FIFO): a list of
+        (model, queue depth, oldest request's submit time)."""
+        with self._lock:
+            live = [(q[0].t_submit, m, len(q))
+                    for m, q in self._queues.items() if q]
+        return [(m, d, t) for t, m, d in sorted(live)]
+
+    def snapshot_oldest(self) -> Optional[Tuple[str, int, float]]:
+        """snapshot()'s head — the model holding the oldest request."""
+        snap = self.snapshot()
+        return snap[0] if snap else None
+
     def pop(self, model: str, n: int) -> List[VisionRequest]:
-        q = self._queues[model]
-        out = [q.popleft() for _ in range(min(n, len(q)))]
-        return out
+        with self._lock:
+            q = self._queues[model]
+            return [q.popleft() for _ in range(min(n, len(q)))]
 
 
 def form_batch(requests: List[VisionRequest], bucket: int,

@@ -1,0 +1,136 @@
+"""Online calibration of ST-OS accelerator predictions to host wall latency.
+
+The systolic simulator prices every (model, batch bucket) in *accelerator*
+milliseconds on the paper's 16x16 array.  The machine actually executing a
+batch (CPU interpret mode today, a real TPU tomorrow) has its own clock, so
+scheduling decisions made in accelerator-ms and SLOs expressed in wall-ms
+disagree by an unknown machine-dependent factor.  This module closes the
+loop: every completed batch contributes an (accelerator-ms, measured
+wall-ms) observation, and once a (model, bucket) cell has enough samples
+the cost model quotes calibrated wall milliseconds instead.
+
+Fit shape: through-origin least squares ``wall = s * accel`` maintained
+online per (model, bucket) with running sums (no sample storage)::
+
+    s = sum(accel * wall) / sum(accel^2)
+
+The accelerator prediction for one (model, bucket) is a constant, so the
+through-origin fit degenerates gracefully to the ratio-of-means estimator —
+exactly the right thing — while staying well-defined when the predictor
+varies (e.g. after a simulator-config change mid-process).  A pooled
+per-model fit over *all* of that model's observations backs up buckets that
+have not individually converged yet, so bucket selection never compares
+calibrated wall-ms for one bucket against raw accelerator-ms for another.
+
+Thread safety: ``observe`` runs on the engine's completion thread while
+``calibrated_ms`` serves admission control on caller threads; all state is
+guarded by one lock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class _Fit:
+    """Running through-origin least-squares accumulator."""
+    n: int = 0
+    sum_xy: float = 0.0
+    sum_xx: float = 0.0
+    sum_abs_resid: float = 0.0     # |measured - fit-at-observation-time|
+
+    def add(self, x: float, y: float) -> None:
+        self.n += 1
+        self.sum_xy += x * y
+        self.sum_xx += x * x
+
+    @property
+    def scale(self) -> Optional[float]:
+        if self.n == 0 or self.sum_xx <= 0.0:
+            return None
+        return self.sum_xy / self.sum_xx
+
+    def summary(self) -> Dict[str, float]:
+        return {"n": self.n, "scale": self.scale if self.scale else 0.0,
+                "mean_abs_resid_ms": (self.sum_abs_resid / self.n
+                                      if self.n else 0.0)}
+
+
+class LatencyCalibrator:
+    """Online accel-ms -> wall-ms calibration per (model key, bucket)."""
+
+    def __init__(self, min_samples: int = 3):
+        assert min_samples >= 1
+        self.min_samples = min_samples
+        self._cells: Dict[Tuple[str, int], _Fit] = {}
+        self._pooled: Dict[str, _Fit] = {}
+        self._lock = threading.Lock()
+
+    # -- intake ---------------------------------------------------------------
+    def observe(self, key: str, bucket: int, accel_ms: float,
+                wall_ms: float) -> Optional[float]:
+        """Record one completed batch; returns the residual (measured minus
+        the calibrated prediction *before* this observation) once this
+        model is calibrated, else None.  The residual is charged against
+        whichever fit ``calibrated_ms`` would have quoted — the bucket's
+        own cell, or the pooled per-model fallback — so pooled-regime SLO
+        decisions are monitored too."""
+        with self._lock:
+            cell = self._cells.setdefault((key, bucket), _Fit())
+            pooled = self._pooled.setdefault(key, _Fit())
+            fit = None
+            if cell.n >= self.min_samples and cell.scale is not None:
+                fit = cell
+            elif pooled.n >= self.min_samples and pooled.scale is not None:
+                fit = pooled
+            resid = None
+            if fit is not None:
+                resid = wall_ms - fit.scale * accel_ms
+                fit.sum_abs_resid += abs(resid)
+            cell.add(accel_ms, wall_ms)
+            pooled.add(accel_ms, wall_ms)
+            return resid
+
+    # -- queries --------------------------------------------------------------
+    def is_calibrated(self, key: str, bucket: int) -> bool:
+        with self._lock:
+            cell = self._cells.get((key, bucket))
+            return (cell is not None and cell.n >= self.min_samples
+                    and cell.scale is not None)
+
+    def calibrated_ms(self, key: str, bucket: int,
+                      accel_ms: float) -> Optional[float]:
+        """Calibrated wall-ms for an accelerator prediction, or None.
+
+        Resolution order: the (model, bucket) cell once it has
+        ``min_samples`` observations, else the pooled per-model fit once
+        *it* has ``min_samples`` (keeps every bucket of a model in the same
+        units as soon as any bucket has data), else None (caller falls back
+        to raw accelerator-ms)."""
+        with self._lock:
+            cell = self._cells.get((key, bucket))
+            if cell is not None and cell.n >= self.min_samples:
+                scale = cell.scale
+                if scale is not None:
+                    return scale * accel_ms
+            pooled = self._pooled.get(key)
+            if pooled is not None and pooled.n >= self.min_samples:
+                scale = pooled.scale
+                if scale is not None:
+                    return scale * accel_ms
+            return None
+
+    def snapshot(self) -> Dict:
+        """{model: {"pooled": fit, "buckets": {bucket: fit}}} summaries."""
+        with self._lock:
+            out: Dict[str, Dict] = {}
+            for key, fit in self._pooled.items():
+                out[key] = {"pooled": fit.summary(), "buckets": {}}
+            for (key, bucket), fit in self._cells.items():
+                s = fit.summary()
+                s["calibrated"] = fit.n >= self.min_samples
+                out.setdefault(key, {"pooled": {}, "buckets": {}})
+                out[key]["buckets"][bucket] = s
+            return out

@@ -26,6 +26,7 @@ from typing import Dict, Optional, Sequence, Tuple
 from repro.systolic.arrays import PAPER_CONFIG, SystolicConfig
 from repro.systolic.simulator import NetworkSim, simulate_network
 
+from repro.serving.vision.calibrate import LatencyCalibrator
 from repro.serving.vision.registry import RegisteredModel
 
 
@@ -33,7 +34,8 @@ from repro.serving.vision.registry import RegisteredModel
 class BucketPlan:
     bucket: int
     served: int                  # requests actually in the batch
-    predicted_ms: float          # simulator latency for the whole batch
+    predicted_ms: float          # expected latency for the whole batch
+    calibrated: bool = False     # True -> predicted_ms is calibrated wall-ms
 
     @property
     def imgs_per_ms(self) -> float:
@@ -42,10 +44,12 @@ class BucketPlan:
 
 class SystolicCostModel:
     def __init__(self, cfg: SystolicConfig = PAPER_CONFIG, *,
-                 stos: bool = True, baseline_dataflow: str = "OS"):
+                 stos: bool = True, baseline_dataflow: str = "OS",
+                 calibrator: Optional[LatencyCalibrator] = None):
         self.cfg = cfg
         self.stos = stos
         self.baseline_dataflow = baseline_dataflow
+        self.calibrator = calibrator
         self._cache: Dict[Tuple[str, int], float] = {}
 
     # -- latency ------------------------------------------------------------
@@ -55,10 +59,32 @@ class SystolicCostModel:
                                 batch=batch, name=model.key)
 
     def predicted_ms(self, model: RegisteredModel, batch: int) -> float:
+        """Raw accelerator-ms from the ST-OS simulator (memoized)."""
         key = (model.key, batch)
         if key not in self._cache:
             self._cache[key] = self.simulate(model, batch).latency_ms
         return self._cache[key]
+
+    def expected_ms(self, model: RegisteredModel,
+                    batch: int) -> Tuple[float, bool]:
+        """(latency, calibrated?) — calibrated wall-ms once the calibrator
+        has enough observations for this model, raw accelerator-ms before."""
+        accel = self.predicted_ms(model, batch)
+        if self.calibrator is not None:
+            wall = self.calibrator.calibrated_ms(model.key, batch, accel)
+            if wall is not None:
+                return wall, True
+        return accel, False
+
+    def observe(self, model: RegisteredModel, batch: int,
+                measured_ms: float) -> Optional[float]:
+        """Feed one completed batch's measured wall latency back into the
+        calibrator; returns the calibration residual when available."""
+        if self.calibrator is None:
+            return None
+        return self.calibrator.observe(model.key, batch,
+                                       self.predicted_ms(model, batch),
+                                       measured_ms)
 
     # -- scheduling ---------------------------------------------------------
     def plan_bucket(self, model: RegisteredModel, queued: int,
@@ -71,7 +97,8 @@ class SystolicCostModel:
         assert queued >= 1
         best: Optional[BucketPlan] = None
         for b in sorted(buckets):
-            plan = BucketPlan(b, min(queued, b), self.predicted_ms(model, b))
+            ms, cal = self.expected_ms(model, b)
+            plan = BucketPlan(b, min(queued, b), ms, cal)
             if best is None or plan.imgs_per_ms > best.imgs_per_ms * (1 + 1e-9):
                 best = plan
         assert best is not None
@@ -94,8 +121,15 @@ class SystolicCostModel:
               backlog_ms: float = 0.0) -> Tuple[bool, float]:
         """(admit?, predicted e2e ms) for a request arriving behind
         ``queued`` same-model requests and ``backlog_ms`` of predicted
-        other-model work the FIFO scheduler will serve first.  No SLO ->
-        always admitted."""
+        other-model/in-flight work the FIFO scheduler will serve first.
+        Latencies are calibrated wall-ms once the calibrator has enough
+        observations (accelerator-ms before).  No SLO -> always admitted.
+
+        Known limitation: while SOME models are calibrated and others are
+        not, the cross-model backlog sum mixes wall-ms and accel-ms, so
+        admission can under-count the uncalibrated models' share until
+        every model has served ``min_samples`` batches (warm-up traffic —
+        the launcher's ``--warm-bursts`` — closes this window)."""
         predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
         if slo_ms is None:
             return True, predicted

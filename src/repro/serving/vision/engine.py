@@ -1,36 +1,64 @@
-"""VisionServeEngine: batched FuSeConv inference with cost-model scheduling.
+"""VisionServeEngine: batched FuSeConv inference with cost-model scheduling
+and an async pipelined executor.
 
 Request lifecycle:
 
   submit(model, image[, slo_ms])
-      -> admission check (systolic cost model predicts e2e latency behind
-         the current queue; SLO'd requests that cannot make it are rejected
-         immediately instead of clogging the queue)
-      -> FIFO queue, per model
+      -> admission check (cost model predicts e2e latency behind the queued
+         plus in-flight work; SLO'd requests that cannot make it are
+         rejected immediately instead of clogging the queue).  Latency is
+         calibrated wall-ms once the calibrator has converged for the
+         model, raw ST-OS accelerator-ms before.
+      -> FIFO queue, per model; returns a request id.  ``future(rid)``
+         hands back a ``VisionFuture`` that resolves when the request
+         completes.
+
+  pipelined executor (default) — three stages connected by bounded queues:
+
+      scheduler thread   picks the model with the oldest waiting request,
+                         asks the cost model for the best batch bucket,
+                         pops requests and forms the padded batch
+                         (letterboxing is the host-side cost) ........ N+1
+      device thread      dispatches the jit-cached apply ............. N
+      completer thread   blocks until the device result is ready,
+                         resolves futures, feeds measured wall latency
+                         back into the calibrator .................... N-1
+
+      The submit/complete queues are bounded by ``max_in_flight``, so host
+      batching of batch N+1 overlaps device execution of batch N without
+      ever racing unboundedly ahead of the device.
+
   flush()
-      -> repeatedly: pick the model with the oldest waiting request, ask
-         the cost model for the best batch bucket (max delivered images per
-         predicted ms), form a padded batch, run the jit-cached apply,
-         slice out per-request logits, account latencies
-      -> returns completed ``VisionResult``s in request order
+      -> waits for the pipeline to drain (or, with ``pipelined=False``,
+         drains synchronously on the caller's thread — the PR-1 behavior,
+         kept for apples-to-apples benchmarking), then hands back (and
+         clears) finished results in request order.
 
 The engine is backend-agnostic: the registry decides whether a model runs
 the XLA reference path or the Pallas kernels (interpret on CPU, compiled on
-TPU).  All scheduling state is host-side and deterministic given the
-submission order.
+TPU).  Scheduling state is host-side.  In sync mode batch composition is
+deterministic given the submission order; in pipelined mode the scheduler
+consumes concurrently with submission, so composition depends on the
+arrival/execution interleaving (``batch_window_ms`` trades latency for
+fuller, more predictable buckets).  Per-request results are identical in
+either case — composition only moves batch boundaries.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
-from repro.serving.vision.batcher import (DEFAULT_BUCKETS, RequestQueue,
-                                          VisionRequest, form_batch)
-from repro.serving.vision.costmodel import SystolicCostModel
+from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
+                                          RequestQueue, VisionRequest,
+                                          form_batch)
+from repro.serving.vision.calibrate import LatencyCalibrator
+from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
 from repro.serving.vision.metrics import ServeMetrics
 from repro.serving.vision.registry import ModelRegistry
 
@@ -39,7 +67,7 @@ from repro.serving.vision.registry import ModelRegistry
 class VisionResult:
     rid: int
     model: str
-    status: str                       # "ok" | "rejected"
+    status: str                       # "ok" | "rejected" | "cancelled" | "error"
     logits: Optional[np.ndarray]      # (num_classes,) for "ok"
     predicted_ms: float               # cost-model estimate at decision time
     queue_ms: float = 0.0
@@ -47,6 +75,50 @@ class VisionResult:
     e2e_ms: float = 0.0
     bucket: int = 0
     batch_fill: int = 0
+    calibrated: bool = False          # predicted_ms was calibrated wall-ms
+    error: Optional[str] = None       # exception text for status "error"
+
+
+class VisionFuture:
+    """Completion handle for one submitted request.
+
+    Resolves exactly once with a ``VisionResult`` (status "ok", "rejected",
+    "cancelled", or "error").  ``result()`` blocks; pass a timeout to poll.
+    """
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._event = threading.Event()
+        self._result: Optional[VisionResult] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> VisionResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still pending")
+        assert self._result is not None
+        return self._result
+
+    def _resolve(self, result: VisionResult) -> None:
+        self._result = result
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _Prepared:
+    """A formed batch travelling through the submit/complete queues."""
+    batch: Batch
+    plan: BucketPlan
+
+
+@dataclasses.dataclass
+class _BatchError:
+    """Device-stage failure travelling the complete queue in logits' place."""
+    exc: BaseException
+
+
+_STOP = object()
 
 
 class VisionServeEngine:
@@ -54,95 +126,384 @@ class VisionServeEngine:
                  cost_model: Optional[SystolicCostModel] = None,
                  metrics: Optional[ServeMetrics] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 pipelined: bool = True,
+                 max_in_flight: int = 2,
+                 batch_window_ms: float = 0.0):
         self.registry = registry
-        self.cost_model = cost_model or SystolicCostModel()
+        self.cost_model = cost_model or SystolicCostModel(
+            calibrator=LatencyCalibrator())
         self.buckets = tuple(sorted(buckets))
         self.metrics = metrics or ServeMetrics(clock)
         self._clock = clock
+        self.pipelined = pipelined
+        self.max_in_flight = max(1, int(max_in_flight))
+        # dynamic-batching coalescing window: a sub-maximal batch is held
+        # back until its oldest request has waited this long, trading a
+        # bounded latency hit for fuller buckets under bursty traffic.
+        # 0 (default) forms batches as soon as the pipeline has a free slot.
+        self.batch_window_ms = max(0.0, float(batch_window_ms))
         self._queue = RequestQueue()
         self._results: Dict[int, VisionResult] = {}
+        self._futures: Dict[int, VisionFuture] = {}
         self._next_rid = 0
+        # one lock for rid/results/futures/in-flight; two wait-sides of it
+        self._lock = threading.Lock()
+        self._work_cv = threading.Condition(self._lock)    # scheduler wakeup
+        self._done_cv = threading.Condition(self._lock)    # flush wakeup
+        self._inflight_batches = 0
+        self._inflight_pred_ms = 0.0
+        # hard bound on outstanding batches anywhere in the pipeline
+        # (formed, queued for the device, executing, or completing)
+        self._depth_sem = threading.Semaphore(self.max_in_flight)
+        self._submit_q: "queue.Queue" = queue.Queue(maxsize=self.max_in_flight)
+        self._complete_q: "queue.Queue" = queue.Queue(
+            maxsize=self.max_in_flight)
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._closing = False
+        self._closed = False
+        self._drain_on_close = True
+        self._flush_waiters = 0        # flush() intent: stop coalescing
 
     # -- intake -------------------------------------------------------------
     def submit(self, model_key: str, image: np.ndarray,
                slo_ms: Optional[float] = None) -> int:
-        """Enqueue one image; returns its request id.
+        """Enqueue one image; returns its request id (see ``future``).
 
         With an SLO, the request is subject to admission control: if the
-        cost model predicts the queue ahead of it plus its own batch already
-        blows the budget, it is rejected now (result status "rejected")."""
+        cost model predicts the queued + in-flight work ahead of it plus its
+        own batch already blows the budget, it is rejected now (result
+        status "rejected")."""
+        if self._closing or self._closed:
+            raise RuntimeError("engine is closed")
         model = self.registry.get(model_key)
-        rid = self._next_rid
-        self._next_rid += 1
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
         self.metrics.on_submit()
         if slo_ms is not None:
-            # The scheduler drains models in global FIFO order, so a request
-            # waits behind every OTHER model's queued work too — charge it.
-            backlog_ms = sum(
-                self.cost_model.drain_ms(self.registry.get(m),
-                                         self._queue.pending(m), self.buckets)
-                for m in self._queue.models_with_work() if m != model_key)
             admitted, predicted = self.cost_model.admit(
                 model, slo_ms, self._queue.pending(model_key), self.buckets,
-                backlog_ms)
+                self._backlog_ms(model_key))
             if not admitted:
                 self.metrics.on_reject()
-                self._results[rid] = VisionResult(rid, model_key, "rejected",
-                                                  None, predicted)
+                res = VisionResult(rid, model_key, "rejected", None,
+                                   predicted)
+                fut = VisionFuture(rid)
+                fut._resolve(res)
+                with self._lock:
+                    self._results[rid] = res
+                    self._futures[rid] = fut
                 return rid
-        self._queue.push(VisionRequest(rid, model_key, np.asarray(image),
-                                       self._clock(), slo_ms))
+        if self.pipelined:
+            self._ensure_started()
+        with self._work_cv:
+            # re-check under the lock close() takes to flip _closing: a
+            # request pushed here is either seen by the draining scheduler
+            # or swept by close()'s cancel pass — never stranded
+            if self._closing or self._closed:
+                raise RuntimeError("engine is closed")
+            self._futures[rid] = VisionFuture(rid)
+            self._queue.push(VisionRequest(rid, model_key,
+                                           np.asarray(image),
+                                           self._clock(), slo_ms))
+            self._work_cv.notify_all()
         return rid
+
+    def future(self, rid: int) -> VisionFuture:
+        """The completion future for a submitted request id."""
+        with self._lock:
+            return self._futures[rid]
+
+    def _backlog_ms(self, model_key: str) -> float:
+        """Predicted work the FIFO scheduler serves before a new
+        ``model_key`` request: every other model's queued drain plus all
+        batches already in flight through the pipeline."""
+        other = sum(
+            self.cost_model.drain_ms(self.registry.get(m), depth,
+                                     self.buckets)
+            for m, depth, _ in self._queue.snapshot() if m != model_key)
+        with self._lock:
+            return other + self._inflight_pred_ms
+
+    # -- pipelined executor --------------------------------------------------
+    def _ensure_started(self) -> None:
+        with self._lock:
+            if self._started:
+                return
+            self._started = True
+            for name, target in (("scheduler", self._scheduler_loop),
+                                 ("device", self._device_loop),
+                                 ("completer", self._completer_loop)):
+                t = threading.Thread(target=target, daemon=True,
+                                     name=f"vision-serve-{name}")
+                self._threads.append(t)
+                t.start()
+
+    def _pick_model(self) -> Optional[Tuple[str, int]]:
+        """(model, depth) of the next batch to form, or None to keep
+        coalescing.  Scans every model with work in global FIFO order so a
+        model whose bucket is full (or whose window expired) dispatches even
+        while an older-but-sub-maximal model is still inside its window —
+        the window must not head-of-line block other models' ready work."""
+        entries = self._queue.snapshot()
+        if not entries:
+            return None
+        if (self.batch_window_ms <= 0.0 or self._closing
+                or self._flush_waiters):
+            m, d, _ = entries[0]
+            return m, d
+        max_bucket = max(self.buckets)
+        now = self._clock()
+        for m, d, t_oldest in entries:
+            if d >= max_bucket:
+                return m, d
+            if now - t_oldest >= self.batch_window_ms / 1e3:
+                return m, d
+        return None                     # everyone is still coalescing
+
+    def _scheduler_loop(self) -> None:
+        try:
+            while True:
+                if self._queue.pending() == 0:
+                    with self._work_cv:
+                        # submit() pushes and close() flips _closing under
+                        # this same lock, so re-checking pending here is
+                        # race-free: a request that won the submit/close
+                        # race is drained, not cancelled
+                        if self._queue.pending() == 0:
+                            if self._closing:
+                                break
+                            self._work_cv.wait(timeout=0.05)
+                    continue
+                if self._closing and not self._drain_on_close:
+                    break
+                pick = self._pick_model()
+                if pick is None:        # sub-maximal batches inside window
+                    with self._work_cv:
+                        self._work_cv.wait(
+                            timeout=min(self.batch_window_ms / 1e3, 0.05))
+                    continue
+                model_key, depth = pick
+                # reserve an in-flight slot before touching the queue; gives
+                # up only on a no-drain close so shutdown can't wedge here
+                acquired = self._depth_sem.acquire(timeout=0.05)
+                while not acquired:
+                    if self._closing and not self._drain_on_close:
+                        break
+                    acquired = self._depth_sem.acquire(timeout=0.05)
+                if not acquired:
+                    break
+                if self._closing and not self._drain_on_close:
+                    self._depth_sem.release()
+                    break
+                model = self.registry.get(model_key)
+                t_h0 = self._clock()
+                try:
+                    plan = self.cost_model.plan_bucket(model, depth,
+                                                       self.buckets)
+                except Exception as exc:
+                    # cost-model failure: fail this model's queued requests
+                    # rather than retrying the same exception forever.  Same
+                    # invariant as the happy path: count the batch in flight
+                    # BEFORE popping so a concurrent flush() can't observe
+                    # an empty queue with nothing in flight mid-failure.
+                    with self._lock:
+                        self._inflight_batches += 1
+                    self.metrics.on_inflight(+1)
+                    self._fail(self._queue.pop(model_key, depth), None, exc,
+                               in_flight=True)
+                    continue
+                with self._lock:
+                    # counted BEFORE the pop so flush never observes an
+                    # empty queue while a batch is being formed
+                    self._inflight_batches += 1
+                    self._inflight_pred_ms += plan.predicted_ms
+                self.metrics.on_inflight(+1)
+                reqs = self._queue.pop(model_key, plan.served)
+                try:
+                    batch = form_batch(reqs, plan.bucket, model.resolution)
+                    self.metrics.on_stage("host", self._clock() - t_h0)
+                except Exception as exc:
+                    self._fail(reqs, plan, exc, in_flight=True)
+                    continue
+                self._submit_q.put(_Prepared(batch, plan))  # backpressure
+        finally:
+            self._submit_q.put(_STOP)
+
+    def _device_loop(self) -> None:
+        try:
+            while True:
+                item = self._submit_q.get()
+                if item is _STOP:
+                    break
+                t0 = self._clock()
+                try:
+                    logits = self.registry.apply(item.batch.model,
+                                                 item.batch.images)
+                except Exception as exc:
+                    logits = _BatchError(exc)
+                self._complete_q.put((item, logits, t0))
+        finally:
+            self._complete_q.put(_STOP)
+
+    def _completer_loop(self) -> None:
+        t_prev: Optional[float] = None
+        while True:
+            got = self._complete_q.get()
+            if got is _STOP:
+                break
+            item, logits, t0 = got
+            try:
+                if isinstance(logits, _BatchError):
+                    raise logits.exc
+                logits = jax.block_until_ready(logits)
+                t1 = self._clock()
+                # service time, not dispatch-to-ready: under pipelining this
+                # batch was dispatched while its predecessor still occupied
+                # the device, so charge it only from the later of its own
+                # dispatch and the previous completion — otherwise measured
+                # (and calibrated) latency double-counts device time
+                t_start = t0 if t_prev is None else max(t0, t_prev)
+                t_prev = t1
+                self.metrics.on_stage("device", t1 - t_start)
+                self._finalize(item, np.asarray(logits), t0, t1,
+                               in_flight=True, service_start=t_start)
+            except Exception as exc:
+                # the failed batch still consumed device timeline up to now;
+                # advance t_prev so the next batch isn't charged for it
+                t_prev = self._clock()
+                self._fail(item.batch.requests, item.plan, exc,
+                           in_flight=True)
+
+    def _fail(self, reqs: List[VisionRequest], plan: Optional[BucketPlan],
+              exc: BaseException, *, in_flight: bool) -> None:
+        """Resolve ``reqs`` with status "error" and release pipeline slots —
+        a poisoned batch must not wedge flush()/close() or leak depth."""
+        out = [VisionResult(r.rid, r.model, "error", None,
+                            plan.predicted_ms if plan else 0.0,
+                            bucket=plan.bucket if plan else 0,
+                            batch_fill=len(reqs), error=repr(exc))
+               for r in reqs]
+        with self._lock:
+            for res in out:
+                self._results[res.rid] = res
+            futs = [self._futures.get(res.rid) for res in out]
+        for fut, res in zip(futs, out):
+            self.metrics.on_error()
+            if fut is not None:
+                fut._resolve(res)
+        with self._done_cv:
+            if in_flight:
+                self._inflight_batches -= 1
+                self._inflight_pred_ms = max(
+                    0.0, self._inflight_pred_ms
+                    - (plan.predicted_ms if plan else 0.0))
+            self._done_cv.notify_all()
+        if in_flight:
+            self.metrics.on_inflight(-1)
+            self._depth_sem.release()
+
+    def _finalize(self, item: _Prepared, logits_np: np.ndarray,
+                  t0: float, t1: float, *, in_flight: bool,
+                  service_start: Optional[float] = None
+                  ) -> List[VisionResult]:
+        batch, plan = item.batch, item.plan
+        model_key = batch.model
+        run_ms = (t1 - (t0 if service_start is None else service_start)) * 1e3
+        resid = self.cost_model.observe(self.registry.get(model_key),
+                                        plan.bucket, run_ms)
+        self.metrics.on_batch(model_key, batch.fill, plan.bucket, run_ms,
+                              plan.predicted_ms, calibrated=plan.calibrated,
+                              resid_ms=resid)
+        out: List[VisionResult] = []
+        for i, r in enumerate(batch.requests):
+            out.append(VisionResult(
+                rid=r.rid, model=model_key, status="ok",
+                logits=logits_np[i], predicted_ms=plan.predicted_ms,
+                queue_ms=(t0 - r.t_submit) * 1e3, run_ms=run_ms,
+                e2e_ms=(t1 - r.t_submit) * 1e3, bucket=plan.bucket,
+                batch_fill=batch.fill, calibrated=plan.calibrated))
+        # publish results and resolve futures BEFORE signalling completion:
+        # a flush() woken by the notify clears self._futures, so a future
+        # resolved after the notify could be lost to a concurrent waiter
+        with self._lock:
+            for res in out:
+                self._results[res.rid] = res
+            futs = [self._futures.get(res.rid) for res in out]
+        for fut, res in zip(futs, out):
+            self.metrics.on_complete(model_key, res.e2e_ms, run_ms)
+            if fut is not None:
+                fut._resolve(res)
+        with self._done_cv:
+            if in_flight:
+                self._inflight_batches -= 1
+                self._inflight_pred_ms = max(
+                    0.0, self._inflight_pred_ms - plan.predicted_ms)
+            self._done_cv.notify_all()
+        if in_flight:
+            self.metrics.on_inflight(-1)
+            self._depth_sem.release()
+        return out
 
     # -- scheduling / execution ---------------------------------------------
     def warmup(self, keys: Optional[Sequence[str]] = None,
                buckets: Optional[Sequence[int]] = None) -> None:
-        """Pre-compile every (model, bucket) pair off the serving path."""
+        """Prewarm every (model, bucket) pair off the serving path: seed the
+        cost model's simulator cache, then both pipeline stages (host batch
+        formation and device jit compile) via the registry hooks."""
+        bks = tuple(buckets) if buckets is not None else self.buckets
         for k in (keys if keys is not None else self.registry.keys()):
-            self.registry.warmup(k, buckets if buckets is not None
-                                 else self.buckets)
+            model = self.registry.get(k)
+            for b in bks:
+                self.cost_model.predicted_ms(model, b)
+            self.registry.prewarm(k, bks)
 
     def step(self) -> List[VisionResult]:
-        """Run ONE batch (the scheduler's pick); [] if nothing is queued."""
-        models = self._queue.models_with_work()
-        if not models:
+        """Synchronously run ONE batch on the caller's thread (the
+        ``pipelined=False`` execution path); [] if nothing is queued."""
+        snap = self._queue.snapshot_oldest()
+        if snap is None:
             return []
-        model_key = models[0]                      # oldest waiting request
+        model_key, depth, _ = snap
         model = self.registry.get(model_key)
-        plan = self.cost_model.plan_bucket(
-            model, self._queue.pending(model_key), self.buckets)
+        t_h0 = self._clock()
+        plan = self.cost_model.plan_bucket(model, depth, self.buckets)
         reqs = self._queue.pop(model_key, plan.served)
         batch = form_batch(reqs, plan.bucket, model.resolution)
-
+        self.metrics.on_stage("host", self._clock() - t_h0)
         t0 = self._clock()
         logits = self.registry.apply(model_key, batch.images)
-        jax.block_until_ready(logits)
+        logits = jax.block_until_ready(logits)
         t1 = self._clock()
-        run_ms = (t1 - t0) * 1e3
-        self.metrics.on_batch(model_key, batch.fill, plan.bucket, run_ms,
-                              plan.predicted_ms)
-
-        logits_np = np.asarray(logits)
-        out: List[VisionResult] = []
-        for i, r in enumerate(reqs):
-            e2e_ms = (t1 - r.t_submit) * 1e3
-            res = VisionResult(
-                rid=r.rid, model=model_key, status="ok",
-                logits=logits_np[i], predicted_ms=plan.predicted_ms,
-                queue_ms=(t0 - r.t_submit) * 1e3, run_ms=run_ms,
-                e2e_ms=e2e_ms, bucket=plan.bucket, batch_fill=batch.fill)
-            self._results[r.rid] = res
-            self.metrics.on_complete(model_key, e2e_ms)
-            out.append(res)
-        return out
+        self.metrics.on_stage("device", t1 - t0)
+        return self._finalize(_Prepared(batch, plan), np.asarray(logits),
+                              t0, t1, in_flight=False)
 
     def flush(self) -> List[VisionResult]:
-        """Drain the queue, then hand back (and clear) finished results."""
-        while self._queue.pending():
-            self.step()
-        done = [self._results[rid] for rid in sorted(self._results)]
-        self._results.clear()
+        """Wait for all queued work to complete (pipelined) or drain it on
+        this thread (sync), then hand back (and clear) finished results."""
+        if self.pipelined:
+            if self._started:
+                with self._done_cv:
+                    # drain intent: the scheduler stops holding sub-maximal
+                    # batches back for the coalescing window
+                    self._flush_waiters += 1
+                    self._work_cv.notify_all()
+                    try:
+                        while self._inflight_batches or self._queue.pending():
+                            self._done_cv.wait(timeout=0.05)
+                    finally:
+                        self._flush_waiters -= 1
+        else:
+            while self._queue.pending():
+                self.step()
+        with self._lock:
+            done = [self._results[rid] for rid in sorted(self._results)]
+            self._results.clear()
+            for r in done:
+                self._futures.pop(r.rid, None)
         return done
 
     def generate(self, items: Sequence[Union[Tuple[str, np.ndarray],
@@ -153,3 +514,42 @@ class VisionServeEngine:
         for item in items:
             self.submit(*item)
         return self.flush()
+
+    # -- shutdown -------------------------------------------------------------
+    def close(self, *, drain: bool = True) -> None:
+        """Stop the pipeline.  ``drain=True`` (default) finishes everything
+        queued and in flight first; ``drain=False`` completes only batches
+        already formed and cancels the rest (their futures resolve with
+        status "cancelled").  Idempotent; ``submit`` raises afterwards."""
+        if self._closed:
+            return
+        with self._work_cv:
+            self._closing = True
+            self._drain_on_close = drain
+            self._work_cv.notify_all()
+        if self._started:
+            for t in self._threads:
+                t.join()
+        elif drain:
+            # sync engine (or pipeline that never started): drain on this
+            # thread so drain=True keeps its contract in every mode
+            while self._queue.pending():
+                self.step()
+        self._closed = True
+        # anything still queued was abandoned by the scheduler (drain=False
+        # or never-started pipeline): resolve as cancelled
+        for snap in iter(self._queue.snapshot_oldest, None):
+            model_key, depth, _ = snap
+            for r in self._queue.pop(model_key, depth):
+                res = VisionResult(r.rid, model_key, "cancelled", None, 0.0)
+                with self._lock:
+                    self._results[r.rid] = res
+                    fut = self._futures.get(r.rid)
+                if fut is not None:
+                    fut._resolve(res)
+
+    def __enter__(self) -> "VisionServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -2,10 +2,25 @@
 
 Pure-Python accounting (no jax): every number here is host-side bookkeeping
 around the jitted compute, so importing this module never touches a device.
+
+Latency tables are **request-weighted**: ``run`` records the batch compute
+time once per request served by that batch, not once per batch, so p99
+under mixed bucket sizes reflects what requests actually experienced (a
+bucket-8 batch carries 8x the weight of a singleton).  Batch-level counts
+(batches, padded slots, cost-model error) stay per-batch.
+
+The pipelined engine additionally reports stage-occupancy numbers: current
+and peak in-flight batch depth, per-stage busy seconds, and an overlap
+ratio (how much of the device stage's busy time was hidden behind host-side
+batching) derived as ``(host_busy + device_busy - wall) / device_busy``,
+clamped to [0, 1].  All mutators take one lock — submit, scheduler, and
+completion threads all write here.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -21,18 +36,38 @@ def percentile(values: List[float], p: float) -> float:
 
 @dataclasses.dataclass
 class LatencyStat:
+    """Latency distribution with bounded memory.
+
+    Count and mean are exact (running totals); percentiles come from a
+    uniform reservoir of at most ``max_samples`` values, so a long-running
+    server neither grows without bound nor pays an ever-larger sort in
+    ``snapshot()``.  The reservoir RNG is seeded, keeping runs repeatable.
+    """
+    max_samples: int = 4096
     samples: List[float] = dataclasses.field(default_factory=list)
+    _count: int = 0
+    _sum: float = 0.0
+    _rng: random.Random = dataclasses.field(
+        default_factory=lambda: random.Random(0))
 
     def record(self, ms: float) -> None:
-        self.samples.append(float(ms))
+        ms = float(ms)
+        self._count += 1
+        self._sum += ms
+        if len(self.samples) < self.max_samples:
+            self.samples.append(ms)
+        else:
+            j = self._rng.randrange(self._count)
+            if j < self.max_samples:
+                self.samples[j] = ms
 
     @property
     def count(self) -> int:
-        return len(self.samples)
+        return self._count
 
     @property
     def mean(self) -> float:
-        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+        return self._sum / self._count if self._count else 0.0
 
     def p(self, q: float) -> float:
         return percentile(self.samples, q)
@@ -47,16 +82,36 @@ class ServeMetrics:
 
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
+        self._lock = threading.Lock()
+        self._reset_locked()
+
+    def _reset_locked(self) -> None:
         self._t_start: Optional[float] = None
         self._t_last: Optional[float] = None
         self.submitted = 0
         self.rejected = 0
         self.completed = 0
+        self.errors = 0                # requests failed by a pipeline stage
         self.batches = 0
+        self.calibrated_batches = 0    # batches scheduled on calibrated ms
         self.padded_slots = 0          # wasted compute from bucket padding
         self.e2e = {}                  # model -> LatencyStat (submit -> done)
-        self.run = {}                  # model -> LatencyStat (batch compute)
+        self.run = {}                  # model -> LatencyStat, request-weighted
         self.cost_model_err = LatencyStat()   # |predicted - measured| in ms
+        self.calibration_resid = LatencyStat()  # |wall - calibrated fit| in ms
+        # pipeline occupancy
+        self.in_flight = 0
+        self.max_in_flight = 0
+        self.host_busy_s = 0.0         # scheduling + letterbox/batch formation
+        self.device_busy_s = 0.0       # dispatch -> block_until_ready
+
+    def reset(self) -> None:
+        """Zero every counter/distribution (e.g. after warm-up traffic so a
+        reported snapshot covers only the measured pass).  Only call while
+        the engine is drained — in-flight work would decrement fresh
+        gauges."""
+        with self._lock:
+            self._reset_locked()
 
     def _stat(self, table: Dict[str, LatencyStat], model: str) -> LatencyStat:
         if model not in table:
@@ -64,24 +119,55 @@ class ServeMetrics:
         return table[model]
 
     def on_submit(self) -> None:
-        self.submitted += 1
-        if self._t_start is None:
-            self._t_start = self._clock()
+        with self._lock:
+            self.submitted += 1
+            if self._t_start is None:
+                self._t_start = self._clock()
 
     def on_reject(self) -> None:
-        self.rejected += 1
+        with self._lock:
+            self.rejected += 1
+
+    def on_error(self) -> None:
+        with self._lock:
+            self.errors += 1
 
     def on_batch(self, model: str, served: int, bucket: int,
-                 run_ms: float, predicted_ms: float) -> None:
-        self.batches += 1
-        self.padded_slots += bucket - served
-        self._stat(self.run, model).record(run_ms)
-        self.cost_model_err.record(abs(predicted_ms - run_ms))
-        self._t_last = self._clock()
+                 run_ms: float, predicted_ms: float, *,
+                 calibrated: bool = False,
+                 resid_ms: Optional[float] = None) -> None:
+        with self._lock:
+            self.batches += 1
+            self.padded_slots += bucket - served
+            self.cost_model_err.record(abs(predicted_ms - run_ms))
+            if calibrated:
+                self.calibrated_batches += 1
+            if resid_ms is not None:
+                self.calibration_resid.record(abs(resid_ms))
+            self._t_last = self._clock()
 
-    def on_complete(self, model: str, e2e_ms: float) -> None:
-        self.completed += 1
-        self._stat(self.e2e, model).record(e2e_ms)
+    def on_complete(self, model: str, e2e_ms: float,
+                    run_ms: Optional[float] = None) -> None:
+        with self._lock:
+            self.completed += 1
+            self._stat(self.e2e, model).record(e2e_ms)
+            if run_ms is not None:
+                self._stat(self.run, model).record(run_ms)
+
+    # -- pipeline occupancy ---------------------------------------------------
+    def on_inflight(self, delta: int) -> None:
+        with self._lock:
+            self.in_flight += delta
+            self.max_in_flight = max(self.max_in_flight, self.in_flight)
+
+    def on_stage(self, stage: str, seconds: float) -> None:
+        with self._lock:
+            if stage == "host":
+                self.host_busy_s += seconds
+            elif stage == "device":
+                self.device_busy_s += seconds
+            else:
+                raise ValueError(stage)
 
     @property
     def wall_s(self) -> float:
@@ -95,15 +181,32 @@ class ServeMetrics:
         wall = self.wall_s
         return self.completed / wall if wall > 0 else 0.0
 
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of device busy time overlapped with host-stage work."""
+        wall = self.wall_s
+        if self.device_busy_s <= 0.0 or wall <= 0.0:
+            return 0.0
+        overlap = self.host_busy_s + self.device_busy_s - wall
+        return max(0.0, min(1.0, overlap / self.device_busy_s))
+
     def snapshot(self) -> Dict:
-        return {
-            "submitted": self.submitted,
-            "rejected": self.rejected,
-            "completed": self.completed,
-            "batches": self.batches,
-            "padded_slots": self.padded_slots,
-            "throughput_ips": self.throughput_ips,
-            "e2e": {m: s.summary() for m, s in self.e2e.items()},
-            "run": {m: s.summary() for m, s in self.run.items()},
-            "cost_model_abs_err_ms": self.cost_model_err.summary(),
-        }
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "errors": self.errors,
+                "batches": self.batches,
+                "calibrated_batches": self.calibrated_batches,
+                "padded_slots": self.padded_slots,
+                "throughput_ips": self.throughput_ips,
+                "max_in_flight": self.max_in_flight,
+                "host_busy_s": self.host_busy_s,
+                "device_busy_s": self.device_busy_s,
+                "overlap_ratio": self.overlap_ratio,
+                "e2e": {m: s.summary() for m, s in self.e2e.items()},
+                "run": {m: s.summary() for m, s in self.run.items()},
+                "cost_model_abs_err_ms": self.cost_model_err.summary(),
+                "calibration_abs_resid_ms": self.calibration_resid.summary(),
+            }

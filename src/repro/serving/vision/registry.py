@@ -104,13 +104,29 @@ class ModelRegistry:
         x = jnp.asarray(images)
         return self.apply_fn(key, bucket)(model.params, x)
 
-    def warmup(self, key: str, buckets) -> None:
-        """Pre-compile one apply per bucket (trace + compile off hot path)."""
+    def prewarm(self, key: str, buckets, *, host: bool = True,
+                device: bool = True) -> None:
+        """Warm the serving pipeline's stages off the hot path.
+
+        device: trace + compile one jitted apply per (model, bucket) and run
+        it once, so the device stage never compiles under traffic.
+        host: exercise the batch-formation path (letterbox + stack + bucket
+        pad) per bucket, so first-request host latency doesn't pay numpy
+        allocator / import warmup either.
+        """
         model = self._models[key]
         res, cin = model.resolution, model.net.in_channels
-        for b in buckets:
-            out = self.apply(key, np.zeros((b, res, res, cin), np.float32))
-            jax.block_until_ready(out)
+        if host:
+            from repro.serving.vision.batcher import (VisionRequest,
+                                                      form_batch)
+            img = np.zeros((res // 2 or 1, res + 1, cin), np.float32)
+            for b in buckets:
+                form_batch([VisionRequest(-1, key, img, 0.0)], b, res)
+        if device:
+            for b in buckets:
+                out = self.apply(key, np.zeros((b, res, res, cin),
+                                               np.float32))
+                jax.block_until_ready(out)
 
     def compiled_buckets(self) -> List[Tuple[str, int]]:
         return sorted(self._jit)

@@ -3,6 +3,10 @@
 One canonical mixed burst: round-robin across the registry's models, image
 extents drawn uniformly from [res/2, 2*res) so every request exercises the
 batcher's letterboxing, pixels standard-normal.  Deterministic per seed.
+
+``make_mixed_burst`` only builds the items (so benchmarks can pre-generate
+traffic outside the timed region); ``submit_mixed_burst`` builds and
+submits them.
 """
 from __future__ import annotations
 
@@ -11,19 +15,58 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 
+def make_mixed_burst(registry, n: int, *, seed: int = 0
+                     ) -> List[Tuple[str, np.ndarray]]:
+    """``n`` mixed-size requests as [(model key, image)], not submitted."""
+    rng = np.random.default_rng(seed)
+    keys = registry.keys()
+    out: List[Tuple[str, np.ndarray]] = []
+    for i in range(n):
+        key = keys[i % len(keys)]
+        res = registry.get(key).resolution
+        h = int(rng.integers(res // 2, res * 2))
+        w = int(rng.integers(res // 2, res * 2))
+        out.append((key, rng.standard_normal((h, w, 3), dtype=np.float32)))
+    return out
+
+
 def submit_mixed_burst(engine, n: int, *, seed: int = 0,
                        slo_ms: Optional[float] = None
                        ) -> List[Tuple[int, str, np.ndarray]]:
     """Submit ``n`` mixed-size requests; returns [(rid, model key, image)]."""
-    rng = np.random.default_rng(seed)
-    keys = engine.registry.keys()
+    return [(engine.submit(key, img, slo_ms=slo_ms), key, img)
+            for key, img in make_mixed_burst(engine.registry, n, seed=seed)]
+
+
+def stream_items(engine, items: List[Tuple[str, np.ndarray]], *,
+                 interarrival_ms: float = 0.0,
+                 slo_ms: Optional[float] = None
+                 ) -> List[Tuple[int, str, np.ndarray]]:
+    """Submit pre-built (model key, image) items open-loop at a fixed rate.
+
+    Models offered load: item i is submitted ``i * interarrival_ms`` after
+    the first, regardless of how fast the engine drains — the client does
+    not wait for completions.  A pipelined engine executes batches inside
+    the arrival gaps; a synchronous engine can only start computing once
+    the caller stops submitting and flushes.
+    """
+    import time
     out: List[Tuple[int, str, np.ndarray]] = []
-    for i in range(n):
-        key = keys[i % len(keys)]
-        res = engine.registry.get(key).resolution
-        h = int(rng.integers(res // 2, res * 2))
-        w = int(rng.integers(res // 2, res * 2))
-        img = rng.standard_normal((h, w, 3), dtype=np.float32)
-        rid = engine.submit(key, img, slo_ms=slo_ms)
-        out.append((rid, key, img))
+    t0 = time.perf_counter()
+    for i, (key, img) in enumerate(items):
+        target = t0 + i * interarrival_ms / 1e3
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        out.append((engine.submit(key, img, slo_ms=slo_ms), key, img))
     return out
+
+
+def stream_mixed_burst(engine, n: int, *, seed: int = 0,
+                       interarrival_ms: float = 0.0,
+                       slo_ms: Optional[float] = None,
+                       ) -> List[Tuple[int, str, np.ndarray]]:
+    """The canonical mixed burst, submitted open-loop (see stream_items)."""
+    return stream_items(engine,
+                        make_mixed_burst(engine.registry, n, seed=seed),
+                        interarrival_ms=interarrival_ms, slo_ms=slo_ms)

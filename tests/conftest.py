@@ -8,3 +8,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running conformance/regression grids (full zoo x backend "
+        "parity sweeps); deselect with -m 'not slow' / `make test-fast`")

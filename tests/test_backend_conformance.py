@@ -1,0 +1,143 @@
+"""Backend-conformance harness: Pallas kernels vs the XLA reference path.
+
+The serving engine dispatches whole networks through
+``zoo.apply_network(..., backend=...)``, so any numerical divergence
+between the Pallas wrappers (interpret mode on CPU) and the lax reference
+silently corrupts served logits.  This suite pins parity at two levels:
+
+  * operator level — every FuSe 2-D wrapper and the pointwise matmul
+    kernel over a grid of shapes (odd/even/prime extents), kernel sizes,
+    and strides, against ``repro.core.fuseconv``;
+  * network level — every zoo network (width 0.25x, 32px: same topology,
+    CPU-sized) and every spatial-operator variant of tiny_net, run
+    end-to-end on both backends with identical params.
+
+The full grids are registered under the ``slow`` marker (``make test``
+runs them, ``make test-fast`` skips them); a small representative subset
+stays in the fast tier so day-to-day runs still cross-check the backends.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fuseconv as fc
+from repro.kernels import ops as kops
+from repro.vision import zoo
+
+RTOL = ATOL = 1e-4
+
+
+def _x(shape, seed=0):
+    return np.asarray(
+        np.random.default_rng(seed).standard_normal(shape), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Operator level: FuSe 2-D wrappers + pointwise vs the lax reference.
+# ---------------------------------------------------------------------------
+
+FAST_GRID = [
+    # (h, w, c, k, stride) — one even, one odd/prime, one strided-even case
+    (8, 8, 4, 3, 1),
+    (13, 7, 6, 5, 1),
+    (16, 10, 4, 3, 2),
+]
+SLOW_GRID = [
+    (h, w, c, k, s)
+    for (h, w) in [(7, 7), (8, 8), (11, 13), (16, 16), (20, 12), (5, 17)]
+    for c in (3, 8)
+    for k in (3, 5)
+    for s in (1, 2)
+]
+
+
+def _check_fuse_ops(h, w, c, k, stride):
+    x = _x((2, h, w, c))
+    w_row = _x((k, c), seed=1) * 0.5
+    w_col = _x((k, c), seed=2) * 0.5
+    got = kops.fuse_conv2d_full(x, w_row, w_col, stride=stride,
+                                interpret=True)
+    ref = fc.fuse_conv2d_full(x, w_row, w_col, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=RTOL, atol=ATOL)
+    c_r = c // 2
+    got = kops.fuse_conv2d_half(x, w_row[:, :c_r], w_col[:, c_r:],
+                                stride=stride, interpret=True)
+    ref = fc.fuse_conv2d_half(x, w_row[:, :c_r], w_col[:, c_r:],
+                              stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("h,w,c,k,stride", FAST_GRID)
+def test_fuse_ops_match_reference_fast(h, w, c, k, stride):
+    _check_fuse_ops(h, w, c, k, stride)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("h,w,c,k,stride", SLOW_GRID)
+def test_fuse_ops_match_reference_grid(h, w, c, k, stride):
+    _check_fuse_ops(h, w, c, k, stride)
+
+
+@pytest.mark.parametrize("shape,cout", [((2, 8, 8, 4), 6),
+                                        ((1, 13, 7, 5), 3),
+                                        ((3, 40, 2), 9)])
+def test_pointwise_matches_reference(shape, cout):
+    x = _x(shape)
+    w = _x((shape[-1], cout), seed=3) * 0.3
+    got = kops.pointwise(x, w, interpret=True)
+    if x.ndim == 4:
+        ref = fc.pointwise_conv2d(x, w)
+    else:
+        ref = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Network level: every zoo network x backend, identical params.
+# ---------------------------------------------------------------------------
+
+def _net_logits(net, variant, params, backend, x):
+    logits, _ = zoo.apply_network(params, net, x, variant, train=False,
+                                  backend=backend)
+    return np.asarray(logits)
+
+
+def _assert_backends_agree(net, variant, *, batch=2, seed=0):
+    params = zoo.init_network(jax.random.PRNGKey(seed), net, variant)
+    x = _x((batch, net.resolution, net.resolution, net.in_channels),
+           seed=seed + 7)
+    ref = _net_logits(net, variant, params, "xla", x)
+    got = _net_logits(net, variant, params, "pallas", x)
+    assert got.shape == ref.shape
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_zoo_network_backend_parity(name):
+    """Every paper evaluation network, CPU-sized (0.25x width, 32px):
+    identical logits on the xla and pallas-interpret backends."""
+    net = zoo.ZOO[name](num_classes=16, width_mult=0.25, resolution=32)
+    _assert_backends_agree(net, "fuse_half")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", ["fuse_half", "fuse_full",
+                                     ["depthwise", "fuse_half", "fuse_full",
+                                      "fuse_half"]])
+def test_tiny_net_variant_backend_parity(variant):
+    """All spatial-operator variants (including a hybrid per-stage list)
+    agree across backends on the CPU-sized network."""
+    net = zoo.tiny_net(num_classes=8, resolution=16, width=8)
+    _assert_backends_agree(net, variant if isinstance(variant, str)
+                           else tuple(variant))
+
+
+def test_tiny_net_backend_parity_fast():
+    """Fast-tier cross-backend sentinel (the full grids are slow-marked)."""
+    net = zoo.tiny_net(num_classes=4, resolution=16, width=8)
+    _assert_backends_agree(net, "fuse_full")

@@ -1,0 +1,435 @@
+"""Deterministic async-executor tests: fake clock + stub backend.
+
+The pipelined engine is exercised without jax or real models: a stub
+registry whose ``apply`` can be gated on an event (so tests control exactly
+when the device stage completes) and a stub cost model with fixed per-batch
+latency.  Covers the executor contracts: bounded in-flight depth, in-order
+per-request completion, SLO rejection under backlog, graceful shutdown with
+in-flight batches, the flush drain-intent bypass of the coalescing window,
+and the request-level (not batch-level) latency accounting fix.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.vision import (BucketPlan, LatencyCalibrator,
+                                  ModelRegistry, ServeMetrics,
+                                  SystolicCostModel, VisionServeEngine)
+from repro.vision import zoo
+
+
+class FakeClock:
+    """Monotonic fake clock advancing a fixed tick per read (thread-safe)."""
+
+    def __init__(self, tick: float = 1e-3):
+        self._t = 0.0
+        self._tick = tick
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            self._t += self._tick
+            return self._t
+
+
+class StubModel:
+    def __init__(self, key: str, resolution: int = 8):
+        self.key = key
+        self.resolution = resolution
+
+
+class StubRegistry:
+    """Duck-typed registry: identity-encoding logits, optionally gated.
+
+    ``apply`` returns (batch, 2) logits where row i carries the mean of
+    image i, so tests can prove each request got its own slice back.
+    When ``gate`` is set, ``apply`` blocks until the event fires — the
+    test controls when the device stage finishes.
+    """
+
+    def __init__(self, keys=("m",), resolution: int = 8, gate=None):
+        self._models = {k: StubModel(k, resolution) for k in keys}
+        self.gate = gate
+        self.applied = []          # (key, batch_shape) in dispatch order
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        return self._models[key]
+
+    def keys(self):
+        return list(self._models)
+
+    def prewarm(self, key, buckets, **kw):
+        pass
+
+    def apply(self, key, images):
+        with self._lock:
+            self.applied.append((key, images.shape))
+        if self.gate is not None:
+            assert self.gate.wait(timeout=30.0), "test gate never opened"
+        means = images.reshape(images.shape[0], -1).mean(axis=1)
+        return np.stack([means, np.ones_like(means)], axis=1)
+
+
+class StubCostModel:
+    """Fixed ``ms_per_batch`` latency; greedy max-bucket batching."""
+
+    def __init__(self, ms_per_batch: float = 10.0):
+        self.ms = ms_per_batch
+        self.observed = []
+
+    def _bucket(self, queued, buckets):
+        for b in sorted(buckets):
+            if b >= queued:
+                return b
+        return max(buckets)
+
+    def plan_bucket(self, model, queued, buckets):
+        b = self._bucket(queued, buckets)
+        return BucketPlan(b, min(queued, b), self.ms)
+
+    def drain_ms(self, model, queued, buckets):
+        bmax = max(buckets)
+        return -(-queued // bmax) * self.ms
+
+    def admit(self, model, slo_ms, queued, buckets, backlog_ms=0.0):
+        predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
+        if slo_ms is None:
+            return True, predicted
+        return predicted <= slo_ms, predicted
+
+    def predicted_ms(self, model, batch):
+        return self.ms
+
+    def observe(self, model, bucket, measured_ms):
+        self.observed.append((model.key, bucket, measured_ms))
+        return None
+
+
+def _engine(registry, *, buckets=(1,), max_in_flight=2, ms_per_batch=10.0,
+            batch_window_ms=0.0):
+    return VisionServeEngine(
+        registry, cost_model=StubCostModel(ms_per_batch), buckets=buckets,
+        clock=FakeClock(), max_in_flight=max_in_flight,
+        batch_window_ms=batch_window_ms)
+
+
+def _img(seed: int, res: int = 8) -> np.ndarray:
+    return np.full((res, res, 3), float(seed), np.float32)
+
+
+def _wait_until(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Queue-depth limits.
+# ---------------------------------------------------------------------------
+
+def test_in_flight_depth_is_bounded():
+    gate = threading.Event()
+    reg = StubRegistry(gate=gate)
+    engine = _engine(reg, buckets=(1,), max_in_flight=2)
+    for i in range(8):
+        engine.submit("m", _img(i))
+    # device thread is wedged in the first apply; the scheduler may stage at
+    # most max_in_flight batches total, no matter how deep the queue is
+    assert _wait_until(lambda: len(reg.applied) == 1)
+    time.sleep(0.1)                      # give the pipeline rope to misbehave
+    assert len(reg.applied) == 1         # only one batch ever dispatched
+    assert engine.metrics.max_in_flight <= 2
+    assert engine.metrics.in_flight <= 2
+    gate.set()
+    results = engine.flush()
+    assert [r.status for r in results] == ["ok"] * 8
+    assert len(reg.applied) == 8         # bucket-1 batches, all served
+    assert engine.metrics.max_in_flight <= 2
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# In-order completion per request.
+# ---------------------------------------------------------------------------
+
+def test_requests_complete_in_order_with_their_own_logits():
+    reg = StubRegistry()
+    engine = _engine(reg, buckets=(1, 2, 4), max_in_flight=2)
+    rids = [engine.submit("m", _img(i)) for i in range(9)]
+    futures = [engine.future(rid) for rid in rids]
+    results = engine.flush()
+    assert [r.rid for r in results] == rids
+    for i, r in enumerate(results):
+        assert r.status == "ok"
+        # identity logits: row carried this request's image mean
+        assert r.logits[0] == pytest.approx(float(i))
+        assert r.e2e_ms > 0 and r.run_ms > 0 and r.queue_ms >= 0
+    for i, fut in enumerate(futures):
+        assert fut.done()
+        assert fut.result(timeout=1).rid == rids[i]
+    # batches were dispatched in FIFO order (mean of first request in each
+    # batch is non-decreasing)
+    firsts = [shape for _, shape in reg.applied]
+    assert len(firsts) >= 3
+
+
+def test_multi_model_fifo_fairness():
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _engine(reg, buckets=(1,), max_in_flight=1)
+    rids = [engine.submit(("a", "b")[i % 2], _img(i)) for i in range(6)]
+    results = engine.flush()
+    assert [r.rid for r in results] == rids
+    # the scheduler served batches in arrival order across models
+    assert [k for k, _ in reg.applied] == ["a", "b", "a", "b", "a", "b"]
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# SLO rejection under backlog.
+# ---------------------------------------------------------------------------
+
+def test_slo_rejected_while_backlog_in_flight():
+    gate = threading.Event()
+    reg = StubRegistry(gate=gate)
+    engine = _engine(reg, buckets=(1,), max_in_flight=2, ms_per_batch=10.0)
+    for i in range(4):
+        engine.submit("m", _img(i))          # no SLO: always admitted
+    assert _wait_until(lambda: len(reg.applied) == 1)
+    # 4 batches of work ahead (queued + in flight) at 10ms each; a request
+    # that needs everything done within 15ms cannot make it
+    rid_late = engine.submit("m", _img(99), slo_ms=15.0)
+    assert engine.future(rid_late).result(timeout=1).status == "rejected"
+    # a generous SLO is admitted against the same backlog
+    rid_ok = engine.submit("m", _img(42), slo_ms=1e6)
+    gate.set()
+    results = {r.rid: r for r in engine.flush()}
+    assert results[rid_late].status == "rejected"
+    assert results[rid_late].logits is None
+    assert results[rid_ok].status == "ok"
+    assert engine.metrics.rejected == 1
+    engine.close()
+
+
+def test_slo_admission_flips_to_calibrated_wall_ms():
+    """Acceptance: once >= min_samples observations exist for a (model,
+    bucket), admission and planning run in calibrated wall-ms."""
+    reg = ModelRegistry(backend="xla")
+    model = reg.register(zoo.tiny_net(), "fuse_full")
+    cal = LatencyCalibrator(min_samples=2)
+    cm = SystolicCostModel(calibrator=cal)
+    accel = cm.predicted_ms(model, 1)
+    ok, predicted = cm.admit(model, accel * 10, 0, (1,))
+    assert ok and predicted == pytest.approx(accel)      # accel-ms regime
+    for _ in range(2):
+        cm.observe(model, 1, accel * 100.0)              # host is 100x slower
+    ms, calibrated = cm.expected_ms(model, 1)
+    assert calibrated and ms == pytest.approx(accel * 100.0)
+    # the same SLO that passed in accelerator-ms now (correctly) rejects
+    ok, predicted = cm.admit(model, accel * 10, 0, (1,))
+    assert not ok and predicted == pytest.approx(accel * 100.0)
+    # unseen bucket falls back to the pooled per-model fit: same units
+    ms4, calibrated4 = cm.expected_ms(model, 4)
+    assert calibrated4 and ms4 == pytest.approx(
+        cm.predicted_ms(model, 4) * 100.0)
+    plan = cm.plan_bucket(model, 3, (1, 2, 4))
+    assert plan.calibrated
+
+
+def test_calibrator_least_squares_and_residuals():
+    cal = LatencyCalibrator(min_samples=3)
+    assert cal.calibrated_ms("m", 1, 2.0) is None
+    for y in (9.0, 10.0, 11.0):
+        resid = cal.observe("m", 1, 2.0, y)
+        assert resid is None                  # not calibrated during fill
+    assert cal.is_calibrated("m", 1)
+    assert cal.calibrated_ms("m", 1, 2.0) == pytest.approx(10.0)
+    resid = cal.observe("m", 1, 2.0, 14.0)    # now residuals are reported
+    assert resid == pytest.approx(4.0)
+    snap = cal.snapshot()
+    assert snap["m"]["buckets"][1]["calibrated"]
+    assert snap["m"]["pooled"]["n"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Graceful shutdown with in-flight batches.
+# ---------------------------------------------------------------------------
+
+def test_close_drains_in_flight_batches():
+    gate = threading.Event()
+    reg = StubRegistry(gate=gate)
+    engine = _engine(reg, buckets=(1,), max_in_flight=2)
+    rids = [engine.submit("m", _img(i)) for i in range(5)]
+    assert _wait_until(lambda: len(reg.applied) == 1)
+    closer = threading.Thread(target=engine.close)   # drain=True
+    closer.start()
+    time.sleep(0.05)
+    assert closer.is_alive()                 # close waits for in-flight work
+    gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    for rid in rids:
+        assert engine.future(rid).result(timeout=1).status == "ok"
+    with pytest.raises(RuntimeError):
+        engine.submit("m", _img(0))
+
+
+def test_close_without_drain_cancels_queued_requests():
+    gate = threading.Event()
+    reg = StubRegistry(gate=gate)
+    engine = _engine(reg, buckets=(1,), max_in_flight=2)
+    rids = [engine.submit("m", _img(i)) for i in range(6)]
+    assert _wait_until(lambda: len(reg.applied) == 1)
+    closer = threading.Thread(target=lambda: engine.close(drain=False))
+    closer.start()
+    time.sleep(0.05)
+    gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    statuses = [engine.future(rid).result(timeout=1).status for rid in rids]
+    n_ok = statuses.count("ok")
+    # batches already formed/in flight complete; the rest are cancelled
+    assert 1 <= n_ok <= 2
+    assert statuses.count("cancelled") == 6 - n_ok
+    assert all(engine.future(rid).done() for rid in rids)
+
+
+def test_pipeline_contains_bad_requests_without_wedging():
+    """A request that blows up in a pipeline stage resolves as "error" and
+    releases its slots — flush() and later traffic keep working."""
+    reg = StubRegistry()
+    engine = _engine(reg, buckets=(1,), max_in_flight=2)
+    bad = engine.submit("m", np.zeros((8, 8), np.float32))   # 2-D: letterbox
+    good = engine.submit("m", _img(5))                       # asserts ndim==3
+    results = {r.rid: r for r in engine.flush()}
+    assert results[bad].status == "error"
+    assert results[bad].logits is None and results[bad].error
+    assert results[good].status == "ok"
+    assert engine.metrics.errors == 1
+    # the pipeline is still healthy after the failure
+    again = engine.submit("m", _img(6))
+    assert engine.future(again).result(timeout=30).status == "ok"
+    engine.close()
+
+
+def test_device_stage_error_resolves_futures():
+    class ExplodingRegistry(StubRegistry):
+        def apply(self, key, images):
+            raise RuntimeError("device on fire")
+
+    engine = _engine(ExplodingRegistry(), buckets=(2,), max_in_flight=2)
+    rids = [engine.submit("m", _img(i)) for i in range(3)]
+    results = {r.rid: r for r in engine.flush()}
+    for rid in rids:
+        assert results[rid].status == "error"
+        assert "device on fire" in results[rid].error
+    engine.close()
+
+
+def test_close_is_idempotent_and_safe_before_start():
+    engine = _engine(StubRegistry())
+    engine.close()
+    engine.close()
+    with pytest.raises(RuntimeError):
+        engine.submit("m", _img(0))
+
+
+def test_close_drains_sync_engine_too():
+    """drain=True keeps its contract in sync mode: queued requests are
+    served on the closing thread, not cancelled."""
+    reg = StubRegistry()
+    engine = VisionServeEngine(reg, cost_model=StubCostModel(),
+                               buckets=(2,), clock=FakeClock(),
+                               pipelined=False)
+    rids = [engine.submit("m", _img(i)) for i in range(3)]
+    engine.close()                       # drain=True default
+    for rid in rids:
+        assert engine.future(rid).result(timeout=1).status == "ok"
+    # and drain=False cancels instead
+    engine2 = VisionServeEngine(StubRegistry(), cost_model=StubCostModel(),
+                                buckets=(2,), clock=FakeClock(),
+                                pipelined=False)
+    rid = engine2.submit("m", _img(0))
+    engine2.close(drain=False)
+    assert engine2.future(rid).result(timeout=1).status == "cancelled"
+
+
+# ---------------------------------------------------------------------------
+# Coalescing window + flush drain-intent bypass.
+# ---------------------------------------------------------------------------
+
+def test_window_does_not_head_of_line_block_other_models():
+    """A model with a full max bucket dispatches immediately even while an
+    older-but-sub-maximal model is still coalescing inside its window."""
+    reg = StubRegistry(keys=("a", "b"))
+    engine = VisionServeEngine(
+        reg, cost_model=StubCostModel(), buckets=(1, 2), max_in_flight=2,
+        batch_window_ms=60_000.0)
+    engine.submit("a", _img(0))          # oldest, sub-maximal: coalescing
+    engine.submit("b", _img(1))
+    engine.submit("b", _img(2))          # b now holds a full bucket-2 batch
+    assert _wait_until(lambda: len(reg.applied) >= 1)
+    assert reg.applied[0][0] == "b"      # b did not wait for a's window
+    results = engine.flush()             # drain intent releases a too
+    assert [r.status for r in results] == ["ok"] * 3
+    engine.close()
+
+
+def test_flush_bypasses_batch_window():
+    reg = StubRegistry()
+    # window far larger than the test budget: only the flush bypass can
+    # release these requests
+    engine = VisionServeEngine(
+        reg, cost_model=StubCostModel(), buckets=(4,), max_in_flight=2,
+        batch_window_ms=60_000.0)
+    for i in range(3):
+        engine.submit("m", _img(i))
+    t0 = time.monotonic()
+    results = engine.flush()
+    assert time.monotonic() - t0 < 30.0
+    assert [r.status for r in results] == ["ok"] * 3
+    # the window coalesced all three into a single bucket-4 batch
+    assert len(reg.applied) == 1
+    assert results[0].batch_fill == 3 and results[0].bucket == 4
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Request-level latency accounting (the BatchMetrics percentile fix).
+# ---------------------------------------------------------------------------
+
+def test_run_percentiles_are_request_weighted():
+    """p99/p50 must weight a bucket-8 batch 8x a singleton: batch-level
+    accounting said p50(run)=1000ms here, request-level says 10ms."""
+    m = ServeMetrics(clock=FakeClock())
+    m.on_submit()
+    m.on_batch("net", served=3, bucket=4, run_ms=10.0, predicted_ms=5.0)
+    for _ in range(3):
+        m.on_complete("net", e2e_ms=12.0, run_ms=10.0)
+    m.on_batch("net", served=1, bucket=1, run_ms=1000.0, predicted_ms=5.0)
+    m.on_complete("net", e2e_ms=1002.0, run_ms=1000.0)
+    snap = m.snapshot()
+    assert snap["run"]["net"]["count"] == 4          # requests, not batches
+    assert snap["run"]["net"]["p50_ms"] == 10.0
+    assert snap["run"]["net"]["p99_ms"] == 1000.0
+    assert snap["batches"] == 2
+    assert snap["padded_slots"] == 1
+
+
+def test_engine_run_stats_count_requests_not_batches():
+    reg = StubRegistry()
+    engine = _engine(reg, buckets=(4,), max_in_flight=1)
+    for i in range(4):
+        engine.submit("m", _img(i))
+    results = engine.flush()
+    assert all(r.status == "ok" for r in results)
+    snap = engine.metrics.snapshot()
+    assert snap["run"]["m"]["count"] == 4
+    assert snap["e2e"]["m"]["count"] == 4
+    assert snap["batches"] == len(reg.applied)
+    engine.close()

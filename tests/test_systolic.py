@@ -98,6 +98,95 @@ def test_overhead_model_matches_table2():
         assert abs(mp - power) < 1.6
 
 
+# ---------------------------------------------------------------------------
+# Golden cycle counts: regression pins for the serving cost model.
+#
+# The serving layer's bucket selection and SLO admission are priced by these
+# exact numbers (SystolicCostModel memoizes simulate_network), so a refactor
+# that shifts them silently re-schedules production traffic.  Values were
+# recorded from the simulator at PR-2 time on PAPER_CONFIG (16x16, ST-OS for
+# FuSe 1-D ops, OS baseline).  An intentional model change must update them
+# in the same commit — alongside a fresh look at the paper-band assertions
+# above.
+# ---------------------------------------------------------------------------
+
+GOLDEN_OPS = [
+    # (label, opspec, dataflow, compute_cycles, useful_macs)
+    ("stem_conv", OpSpec("conv", "stem", 224, 224, 3, 32, 3, 2),
+     "OS", 114464, 10838016),
+    ("pointwise", OpSpec("pointwise", "pw", 14, 14, 240, 1280),
+     "OS", 297440, 60211200),
+    ("depthwise_s1", OpSpec("depthwise", "dw", 14, 14, 240, 240, 3, 1),
+     "OS", 171600, 423360),
+    ("depthwise_k5", OpSpec("depthwise", "dw5", 7, 7, 960, 960, 5, 1),
+     "OS", 272640, 1176000),
+    ("depthwise_ws", OpSpec("depthwise", "dww", 14, 14, 240, 240, 3, 1),
+     "WS", 58080, 423360),
+    ("fuse_row_os", OpSpec("fuse_row", "fr", 14, 14, 120, 120, 3, 1),
+     "OS", 76440, 70560),
+    ("fuse_row", OpSpec("fuse_row", "fr", 14, 14, 120, 120, 3, 1),
+     "ST-OS", 333, 70560),
+    ("fuse_col", OpSpec("fuse_col", "fcl", 14, 14, 120, 120, 3, 1),
+     "ST-OS", 333, 70560),
+    ("fuse_row_s2", OpSpec("fuse_row", "fr2", 56, 56, 64, 64, 5, 2),
+     "ST-OS", 1140, 250880),
+    ("fuse_col_k5", OpSpec("fuse_col", "fc5", 7, 7, 960, 960, 5, 1),
+     "ST-OS", 2120, 235200),
+]
+
+
+@pytest.mark.parametrize("label,op,flow,cycles,macs", GOLDEN_OPS,
+                         ids=[g[0] for g in GOLDEN_OPS])
+def test_golden_op_cycles(label, op, flow, cycles, macs):
+    sim = df.simulate_op(op, PAPER_CONFIG, dataflow=flow)
+    assert sim.compute_cycles == cycles, (label, sim.compute_cycles)
+    assert sim.useful_macs == macs, (label, sim.useful_macs)
+
+
+GOLDEN_NETWORKS = [
+    # (network, variant, total cycles incl. bandwidth stalls)
+    ("tiny_net", "depthwise", 332506.0),
+    ("tiny_net", "fuse_half", 72600.0),
+    ("tiny_net", "fuse_full", 91938.0),
+    ("mnasnet_b1", "depthwise", 9879488.0),
+    ("mnasnet_b1", "fuse_half", 2346588.5),
+    ("mnasnet_b1", "fuse_full", 3202185.0),
+    ("mobilenet_v1", "depthwise", 9783858.0),
+    ("mobilenet_v1", "fuse_half", 3199828.0),
+    ("mobilenet_v1", "fuse_full", 5718774.0),
+    ("mobilenet_v2", "depthwise", 10338242.0),
+    ("mobilenet_v2", "fuse_half", 2429828.0),
+    ("mobilenet_v2", "fuse_full", 3268182.0),
+    ("mobilenet_v3_large", "depthwise", 7093912.0),
+    ("mobilenet_v3_large", "fuse_half", 1900437.5),
+    ("mobilenet_v3_large", "fuse_full", 2754829.0),
+    ("mobilenet_v3_small", "depthwise", 2344980.0),
+    ("mobilenet_v3_small", "fuse_half", 615249.5),
+    ("mobilenet_v3_small", "fuse_full", 852891.0),
+]
+
+
+@pytest.mark.parametrize("name,variant,cycles", GOLDEN_NETWORKS,
+                         ids=[f"{n}-{v}" for n, v, _ in GOLDEN_NETWORKS])
+def test_golden_network_cycles(name, variant, cycles):
+    f = zoo.tiny_net if name == "tiny_net" else zoo.ZOO[name]
+    sim = simulate_network(zoo.lower_to_ir(f(), variant))
+    assert sim.cycles == pytest.approx(cycles, rel=0, abs=0.5), \
+        (name, variant, sim.cycles)
+
+
+def test_golden_batch_scaling():
+    """The exact points the serving cost model quotes for tiny_net
+    fuse_half buckets (simulate_network(batch=...) drives predicted_ms)."""
+    ir = zoo.lower_to_ir(zoo.tiny_net(), "fuse_half")
+    b1 = simulate_network(ir, batch=1)
+    b4 = simulate_network(ir, batch=4)
+    assert b1.cycles == 72600.0
+    assert b4.cycles == 287544.0
+    assert b1.latency_ms == pytest.approx(0.0726)
+    assert b4.latency_ms == pytest.approx(0.287544)
+
+
 @settings(max_examples=30, deadline=None)
 @given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
 def test_gemm_mac_conservation(m, k, n):
