@@ -1,14 +1,18 @@
 # One-command checks for every PR.
 #   make test        — tier-1 pytest suite (includes the slow conformance grids)
 #   make test-fast   — tier-1 minus tests marked `slow` (inner-loop runs)
-#   make bench-smoke — tiny vision-serve benchmark (writes BENCH_serve.json)
-#   make ci          — the full PR gate: test + bench-smoke
+#   make bench-smoke — tiny vision-serve benchmark (sync vs async, plus
+#                      sharded cross-model rounds on 2 virtual devices —
+#                      one per container core; writes BENCH_serve.json)
+#   make docs-check  — README/docs link + layout-table check, quickstart
+#                      commands in dry-run form
+#   make ci          — the full PR gate: test + bench-smoke + docs-check
 #   make serve-demo  — end-to-end serving example on the Pallas backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke ci serve-demo
+.PHONY: test test-fast bench-smoke docs-check ci serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,8 +22,13 @@ test-fast:
 
 bench-smoke:
 	$(PY) -m benchmarks.run serve --json BENCH_serve.json
+	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
+	$(PY) -m benchmarks.run serve_sharded --json BENCH_serve.json
 
-ci: test bench-smoke
+docs-check:
+	$(PY) scripts/docs_check.py
+
+ci: test bench-smoke docs-check
 
 serve-demo:
 	$(PY) examples/serve_vision.py

@@ -4,10 +4,15 @@
 ``PYTHONPATH=src python -m benchmarks.run table3 fig8`` — a subset
 ``PYTHONPATH=src python -m benchmarks.run --json out.json serve``
 Prints ``name,us_per_call,derived`` CSV lines; ``--json`` additionally
-writes machine-readable ``{suite: {name: us_per_call}}`` results.
+writes machine-readable ``{suite: {name: us_per_call}}`` results, merging
+into an existing file suite-by-suite — so suites needing different process
+environments (e.g. ``serve_sharded`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count``) can accumulate into
+one trajectory file across invocations.
 """
 import argparse
 import json
+import os
 
 from benchmarks import (common, fig8_latency, fig9_operators,
                         fig10_utilization, fig11_bandwidth, kernels_micro,
@@ -25,6 +30,7 @@ SUITES = {
     "kernels": kernels_micro.run,
     "roofline": roofline.run,
     "serve": serve_vision.run,
+    "serve_sharded": serve_vision.run_sharded,
 }
 
 
@@ -42,8 +48,13 @@ def main(argv=None) -> None:
         common.start_suite(name)
         SUITES[name]()
     if args.json_path:
+        merged = {}
+        if os.path.exists(args.json_path):
+            with open(args.json_path) as f:
+                merged = json.load(f)
+        merged.update(common.results())
         with open(args.json_path, "w") as f:
-            json.dump(common.results(), f, indent=2, sort_keys=True)
+            json.dump(merged, f, indent=2, sort_keys=True)
         print(f"wrote {args.json_path}")
 
 

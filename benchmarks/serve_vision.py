@@ -1,4 +1,5 @@
-"""Vision serving engine benchmark: sync vs async pipelined throughput.
+"""Vision serving engine benchmark: sync vs async pipelined throughput,
+plus the sharded cross-model round scheduler (``run_sharded``).
 
 Offered-load comparison: the same open-loop request stream (two tiny_net
 variants, mixed image sizes, fixed inter-arrival gap) is served twice —
@@ -11,6 +12,15 @@ the same deterministic accelerator cost model, so the reported ratio
 isolates the executor.  The model is deliberately small (tiny_net at
 16px/w8): this suite measures serving-layer behavior, not kernel FLOPs —
 kernel-level numbers live in kernels_micro.py.
+
+``run_sharded`` is the multi-model workload: three tiny_net variants under
+a weighted open-loop stream, served once by the single-device sync
+baseline and once by the cross-model round scheduler over a data mesh of
+every visible device.  ``make bench-smoke`` exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — one virtual
+device per container core; more would oversubscribe the CPU and measure
+contention, not scheduling (correctness on 8 virtual devices is pinned by
+tests/test_serve_sharded.py instead).  Reported us/request are wall-clock.
 """
 import time
 
@@ -95,5 +105,92 @@ def run(backend: str = "xla"):
     engines["async"].close()
 
 
+# -- sharded cross-model rounds ---------------------------------------------
+
+SHARDED_BUCKETS = (1, 2, 4, 8)
+SHARDED_REQUESTS = 24
+SHARDED_ITERS = 4
+MODEL_WEIGHTS = (4.0, 2.0, 1.0)      # hot model dominates, all keep traffic
+
+
+def _register_zoo3(registry):
+    from repro.vision import zoo
+    net = zoo.tiny_net(resolution=16, width=8)
+    for variant in ("depthwise", "fuse_half", "fuse_full"):
+        registry.register(net, variant)
+    return registry
+
+
+def _build_sharded_engine(backend: str, n_devices: int):
+    from repro.launch.mesh import make_data_mesh
+    from repro.serving.vision import (ModelRegistry, SystolicCostModel,
+                                      VisionServeEngine)
+
+    mesh = make_data_mesh(n_devices) if n_devices > 1 else None
+    registry = _register_zoo3(ModelRegistry(backend=backend, mesh=mesh))
+    engine = VisionServeEngine(
+        registry, cost_model=SystolicCostModel(n_devices=n_devices),
+        buckets=SHARDED_BUCKETS, pipelined=n_devices > 1,
+        cross_model=n_devices > 1, max_in_flight=3,
+        batch_window_ms=2.0 if n_devices > 1 else 0.0)
+    engine.warmup()
+    return engine
+
+
+def run_sharded(backend: str = "xla"):
+    """Multi-model open-loop stream: sharded cross-model rounds vs the
+    single-device sync baseline (acceptance: sharded >= sync)."""
+    import jax
+
+    from repro.serving.vision import make_mixed_burst, stream_items
+
+    ndev = len(jax.devices())
+    print(f"# serve_sharded: us/request, open-loop {SHARDED_REQUESTS}-"
+          f"request weighted 3-model stream "
+          f"({INTERARRIVAL_MS:.0f}ms inter-arrival), backend={backend}, "
+          f"{ndev} visible device(s)")
+    engines = {"sync_1dev": _build_sharded_engine(backend, 1),
+               "sharded": _build_sharded_engine(backend, ndev)}
+    reg = engines["sharded"].registry
+    warm = make_mixed_burst(reg, SHARDED_REQUESTS, seed=100,
+                            weights=MODEL_WEIGHTS)
+    streams = [make_mixed_burst(reg, SHARDED_REQUESTS, seed=i,
+                                weights=MODEL_WEIGHTS)
+               for i in range(SHARDED_ITERS)]
+    secs = {m: 0.0 for m in engines}
+    for mode in engines:
+        stream_items(engines[mode], warm,
+                     interarrival_ms=INTERARRIVAL_MS)
+        engines[mode].flush()                    # warm scheduling path
+    for items in streams:
+        for mode in engines:
+            t0 = time.perf_counter()
+            stream_items(engines[mode], items,
+                         interarrival_ms=INTERARRIVAL_MS)
+            results = engines[mode].flush()
+            secs[mode] += time.perf_counter() - t0
+            assert all(r.status == "ok" for r in results)
+    us = {}
+    for mode, engine in engines.items():
+        us[mode] = secs[mode] / (SHARDED_ITERS * SHARDED_REQUESTS) * 1e6
+        m = engine.metrics.snapshot()
+        ips = (SHARDED_ITERS * SHARDED_REQUESTS / secs[mode]
+               if secs[mode] else 0.0)
+        emit(f"serve_sharded.stream{SHARDED_REQUESTS}.{mode}.{backend}",
+             f"{us[mode]:.0f}",
+             f"ips={ips:.0f} batches={m['batches']} rounds={m['rounds']} "
+             f"cross_model_rounds={m['cross_model_rounds']} "
+             f"max_round_models={m['max_round_models']} "
+             f"groups={m['max_round_groups']}")
+    speedup = us["sync_1dev"] / us["sharded"] if us["sharded"] else 0.0
+    emit(f"serve_sharded.speedup.{backend}", "-",
+         f"sharded/sync throughput ratio = {speedup:.2f}x on {ndev} "
+         f"device(s) (sync {us['sync_1dev']:.0f}us/req, "
+         f"sharded {us['sharded']:.0f}us/req)")
+    engines["sharded"].close()
+    engines["sync_1dev"].close()
+
+
 if __name__ == "__main__":
     run()
+    run_sharded()

@@ -18,6 +18,16 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_data_mesh(n_devices: int = 0):
+    """1-D data-parallel mesh over the first ``n_devices`` local devices
+    (0 = all).  This is the vision-serving mesh: batches shard over
+    ``"data"``, params replicate.  On CPU, virtual devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = n_devices or len(jax.devices())
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> tuple:
     """The axes a global batch is sharded over (pod acts as outer data)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -4,15 +4,23 @@
       --models tiny_net/depthwise tiny_net/fuse_full \
       --requests 16 --backend xla --slo-ms 50
 
+  # sharded cross-model rounds on 8 (virtual) devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve_vision --mesh 8
+
 ``--models`` entries are ``<zoo name>/<variant>``; ``tiny_net`` plus every
 network in ``repro.vision.zoo.ZOO`` is accepted.  ``--resolution`` overrides
 the network's native input size (tiny configs for CPU smoke runs).
 
 The engine runs its async pipelined executor by default (host batching of
 batch N+1 overlapped with device execution of batch N); ``--sync`` selects
-the synchronous drain-on-caller path for comparison.  ``--warm-bursts``
-replays the burst before the measured pass so the latency calibrator has
-enough observations for SLO admission to operate in calibrated wall-ms.
+the synchronous drain-on-caller path for comparison.  ``--mesh N`` builds a
+1-D data mesh over N devices and turns on the cross-model round scheduler:
+each dispatch co-schedules one bucketed batch per model onto device groups
+of the mesh, and batches shard over their group's ``"data"`` axis.
+``--warm-bursts`` replays the burst before the measured pass so the latency
+calibrator has enough observations for SLO admission to operate in
+calibrated wall-ms.
 """
 from __future__ import annotations
 
@@ -42,6 +50,11 @@ def main(argv=None):
                     choices=["xla", "pallas", "pallas_tpu"])
     ap.add_argument("--resolution", type=int, default=0,
                     help="override network input resolution (0 = native)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard serving over this many devices (1-D data"
+                         " mesh + cross-model round scheduler; 0 = off)."
+                         " On CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request SLO for admission control (calibrated"
@@ -67,7 +80,22 @@ def main(argv=None):
                                       SystolicCostModel, VisionServeEngine,
                                       submit_mixed_burst)
 
-    registry = ModelRegistry(backend=args.backend)
+    mesh = None
+    if args.mesh:
+        import jax
+
+        from repro.launch.mesh import make_data_mesh
+        if len(jax.devices()) < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices but only "
+                f"{len(jax.devices())} are visible; on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh}")
+        if args.sync:
+            raise SystemExit("--mesh needs the pipelined executor; "
+                             "drop --sync")
+        mesh = make_data_mesh(args.mesh)
+
+    registry = ModelRegistry(backend=args.backend, mesh=mesh)
     for entry in args.models:
         name, sep, variant = entry.rpartition("/")
         if not sep or not name:
@@ -79,7 +107,8 @@ def main(argv=None):
 
     calibrator = LatencyCalibrator(min_samples=args.min_calibration_samples)
     engine = VisionServeEngine(
-        registry, cost_model=SystolicCostModel(calibrator=calibrator),
+        registry, cost_model=SystolicCostModel(calibrator=calibrator,
+                                               n_devices=args.mesh or 1),
         buckets=args.buckets, pipelined=not args.sync,
         max_in_flight=args.max_in_flight)
     engine.warmup()
@@ -104,6 +133,7 @@ def main(argv=None):
     snap = engine.metrics.snapshot()
     snap["calibration"] = calibrator.snapshot()
     snap["mode"] = "sync" if args.sync else "pipelined"
+    snap["mesh_devices"] = args.mesh or 1
     print(json.dumps(snap, indent=2, sort_keys=True))
     if args.json_path:
         with open(args.json_path, "w") as f:

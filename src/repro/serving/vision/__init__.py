@@ -15,14 +15,15 @@ See docs/serving_vision.md for the architecture sketch.
 """
 from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
-                                          fit_image, form_batch)
+                                          fit_image, form_batch, form_round)
 from repro.serving.vision.calibrate import LatencyCalibrator
-from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
+from repro.serving.vision.costmodel import (BucketPlan, RoundPart, RoundPlan,
+                                            SystolicCostModel, round_groups)
 from repro.serving.vision.engine import (VisionFuture, VisionResult,
                                          VisionServeEngine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
-                                           default_model_key)
+                                           default_model_key, device_groups)
 from repro.serving.vision.traffic import (make_mixed_burst, stream_items,
                                           stream_mixed_burst,
                                           submit_mixed_burst)
@@ -30,8 +31,9 @@ from repro.serving.vision.traffic import (make_mixed_burst, stream_items,
 __all__ = [
     "Batch", "BucketPlan", "DEFAULT_BUCKETS", "LatencyCalibrator",
     "LatencyStat", "ModelRegistry", "RegisteredModel", "RequestQueue",
-    "ServeMetrics", "SystolicCostModel", "VisionFuture", "VisionRequest",
-    "VisionResult", "VisionServeEngine", "default_model_key", "fit_image",
-    "form_batch", "make_mixed_burst", "percentile", "stream_items",
-    "stream_mixed_burst", "submit_mixed_burst",
+    "RoundPart", "RoundPlan", "ServeMetrics", "SystolicCostModel",
+    "VisionFuture", "VisionRequest", "VisionResult", "VisionServeEngine",
+    "default_model_key", "device_groups", "fit_image", "form_batch",
+    "form_round", "make_mixed_burst", "percentile", "round_groups",
+    "stream_items", "stream_mixed_burst", "submit_mixed_burst",
 ]

@@ -6,13 +6,24 @@ The batcher (a) letterboxes every image to the model's resolution, (b)
 groups requests per model in FIFO order, and (c) pads each formed batch up
 to the chosen bucket so the jit cache sees only |models| x |buckets|
 distinct shapes — no recompiles under mixed traffic.
+
+Cross-model rounds: under the sharded round scheduler, one bucketed batch
+per model with queued work is co-scheduled into a device round —
+``RequestQueue.pop_many`` pops every participating model under a single
+lock acquisition (an atomic round pop: no submitter can interleave and
+reorder FIFO ordering between two models' pops), and ``form_round`` forms
+the per-model batches with per-slot error containment.
+
+Units: ``t_submit`` is a wall-clock timestamp from the engine's clock
+(``time.perf_counter`` seconds unless a test injects a fake); everything
+else here is shapes and counts — no accelerator units enter this module.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import threading
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -114,6 +125,19 @@ class RequestQueue:
             q = self._queues[model]
             return [q.popleft() for _ in range(min(n, len(q)))]
 
+    def pop_many(self, wants: List[Tuple[str, int]]
+                 ) -> List[List[VisionRequest]]:
+        """Atomically pop ``n`` requests for every (model, n) in ``wants``
+        under ONE lock acquisition — the round scheduler's pop: batch
+        composition of a whole cross-model round is a single linearization
+        point with respect to concurrent submitters."""
+        with self._lock:
+            out = []
+            for model, n in wants:
+                q = self._queues.get(model, ())
+                out.append([q.popleft() for _ in range(min(n, len(q)))])
+            return out
+
 
 def form_batch(requests: List[VisionRequest], bucket: int,
                resolution: int) -> Batch:
@@ -127,3 +151,26 @@ def form_batch(requests: List[VisionRequest], bucket: int,
         images = np.concatenate(
             [images, np.zeros((pad,) + images.shape[1:], images.dtype)])
     return Batch(requests[0].model, list(requests), images, bucket)
+
+
+def form_round(pops: List[Tuple[List[VisionRequest], int, int]]
+               ) -> List[Union[Batch, BaseException, None]]:
+    """Form one cross-model round from atomic ``pop_many`` output — a list
+    of (requests, bucket, resolution) triples, one per model — the
+    fleet-level analogue of ST-OS mapping independent convolutions onto
+    independent systolic-array rows.
+
+    Per-slot results, aligned with ``pops`` so the caller can map parts
+    back to their plans: the formed ``Batch``, ``None`` for an empty pop,
+    or the exception a malformed part raised (one bad image must not sink
+    the other models' batches; the containment policy is the caller's)."""
+    out: List[Union[Batch, BaseException, None]] = []
+    for reqs, bucket, res in pops:
+        if not reqs:
+            out.append(None)
+            continue
+        try:
+            out.append(form_batch(reqs, bucket, res))
+        except Exception as exc:
+            out.append(exc)
+    return out

@@ -1,26 +1,39 @@
 """Online calibration of ST-OS accelerator predictions to host wall latency.
 
-The systolic simulator prices every (model, batch bucket) in *accelerator*
-milliseconds on the paper's 16x16 array.  The machine actually executing a
+Units: the simulator prices every (model, batch bucket) in **accelerator
+milliseconds** (accel-ms) on the paper's 16x16 array; measurements arrive in
+**wall milliseconds** (wall-ms) on whatever machine actually executes the
+batch; this module is the only place the two meet.  The machine executing a
 batch (CPU interpret mode today, a real TPU tomorrow) has its own clock, so
-scheduling decisions made in accelerator-ms and SLOs expressed in wall-ms
-disagree by an unknown machine-dependent factor.  This module closes the
-loop: every completed batch contributes an (accelerator-ms, measured
-wall-ms) observation, and once a (model, bucket) cell has enough samples
-the cost model quotes calibrated wall milliseconds instead.
+scheduling decisions made in accel-ms and SLOs expressed in wall-ms disagree
+by an unknown machine-dependent factor.  This module closes the loop: every
+completed batch contributes an (accel-ms, measured wall-ms) observation, and
+once a cell has enough samples the cost model quotes calibrated wall
+milliseconds instead.
 
 Fit shape: through-origin least squares ``wall = s * accel`` maintained
-online per (model, bucket) with running sums (no sample storage)::
+online per (model, bucket, n_devices) with running sums (no sample
+storage)::
 
     s = sum(accel * wall) / sum(accel^2)
 
-The accelerator prediction for one (model, bucket) is a constant, so the
+The accelerator prediction for one cell is a constant, so the
 through-origin fit degenerates gracefully to the ratio-of-means estimator —
 exactly the right thing — while staying well-defined when the predictor
 varies (e.g. after a simulator-config change mid-process).  A pooled
-per-model fit over *all* of that model's observations backs up buckets that
-have not individually converged yet, so bucket selection never compares
-calibrated wall-ms for one bucket against raw accelerator-ms for another.
+per-(model, n_devices) fit over all of that model's observations backs up
+buckets that have not individually converged yet, so bucket selection never
+compares calibrated wall-ms for one bucket against raw accelerator-ms for
+another.  ``n_devices`` is part of the key because a batch sharded over a
+device group has a different accel->wall scale than the same bucket on one
+device (per-device microbatches, collective/dispatch overheads).
+
+Drift: fits are tagged with a per-model **fingerprint** (backend + mesh
+shape, supplied by the cost model).  An observation or query carrying a
+different fingerprint than the one a model's fits were built under drops
+those fits — a backend or mesh change within one process must not serve
+SLO admission from stale scales (previously stale fits survived such a
+change for the whole process lifetime).
 
 Thread safety: ``observe`` runs on the engine's completion thread while
 ``calibrated_ms`` serves admission control on caller threads; all state is
@@ -59,27 +72,73 @@ class _Fit:
 
 
 class LatencyCalibrator:
-    """Online accel-ms -> wall-ms calibration per (model key, bucket)."""
+    """Online accel-ms -> wall-ms calibration per (model, bucket, devices)."""
 
     def __init__(self, min_samples: int = 3):
         assert min_samples >= 1
         self.min_samples = min_samples
-        self._cells: Dict[Tuple[str, int], _Fit] = {}
-        self._pooled: Dict[str, _Fit] = {}
+        self._cells: Dict[Tuple[str, int, int], _Fit] = {}
+        self._pooled: Dict[Tuple[str, int], _Fit] = {}
+        self._fps: Dict[str, str] = {}       # model key -> fit fingerprint
+        self._invalidations = 0
         self._lock = threading.Lock()
+
+    # -- drift ----------------------------------------------------------------
+    def _check_fingerprint_locked(self, key: str,
+                                  fingerprint: Optional[str]) -> bool:
+        """True when ``key``'s fits are valid under ``fingerprint``.  A
+        mismatching fingerprint drops the model's fits (drift: the backend
+        or mesh changed since they were built)."""
+        if fingerprint is None:
+            return True
+        prev = self._fps.get(key)
+        if prev is None:
+            self._fps[key] = fingerprint
+            return True
+        if prev == fingerprint:
+            return True
+        self._drop_locked(key)
+        self._fps[key] = fingerprint
+        self._invalidations += 1
+        return False
+
+    def _drop_locked(self, key: str) -> None:
+        for cell_key in [ck for ck in self._cells if ck[0] == key]:
+            del self._cells[cell_key]
+        for pool_key in [pk for pk in self._pooled if pk[0] == key]:
+            del self._pooled[pool_key]
+
+    @property
+    def invalidations(self) -> int:
+        """How many times a fingerprint mismatch dropped a model's fits."""
+        with self._lock:
+            return self._invalidations
+
+    def invalidate(self, key: Optional[str] = None) -> None:
+        """Manually drop fits for one model (or every model)."""
+        with self._lock:
+            keys = [key] if key is not None else \
+                list({ck[0] for ck in self._cells}
+                     | {pk[0] for pk in self._pooled})
+            for k in keys:
+                self._drop_locked(k)
+                self._fps.pop(k, None)
 
     # -- intake ---------------------------------------------------------------
     def observe(self, key: str, bucket: int, accel_ms: float,
-                wall_ms: float) -> Optional[float]:
+                wall_ms: float, n_devices: int = 1,
+                fingerprint: Optional[str] = None) -> Optional[float]:
         """Record one completed batch; returns the residual (measured minus
         the calibrated prediction *before* this observation) once this
         model is calibrated, else None.  The residual is charged against
-        whichever fit ``calibrated_ms`` would have quoted — the bucket's
-        own cell, or the pooled per-model fallback — so pooled-regime SLO
-        decisions are monitored too."""
+        whichever fit ``calibrated_ms`` would have quoted — the cell's own
+        fit, or the pooled per-model fallback — so pooled-regime SLO
+        decisions are monitored too.  A ``fingerprint`` differing from the
+        one this model's fits were built under drops them first (drift)."""
         with self._lock:
-            cell = self._cells.setdefault((key, bucket), _Fit())
-            pooled = self._pooled.setdefault(key, _Fit())
+            self._check_fingerprint_locked(key, fingerprint)
+            cell = self._cells.setdefault((key, bucket, n_devices), _Fit())
+            pooled = self._pooled.setdefault((key, n_devices), _Fit())
             fit = None
             if cell.n >= self.min_samples and cell.scale is not None:
                 fit = cell
@@ -94,43 +153,73 @@ class LatencyCalibrator:
             return resid
 
     # -- queries --------------------------------------------------------------
-    def is_calibrated(self, key: str, bucket: int) -> bool:
+    def is_calibrated(self, key: str, bucket: int,
+                      n_devices: int = 1) -> bool:
         with self._lock:
-            cell = self._cells.get((key, bucket))
+            cell = self._cells.get((key, bucket, n_devices))
             return (cell is not None and cell.n >= self.min_samples
                     and cell.scale is not None)
 
-    def calibrated_ms(self, key: str, bucket: int,
-                      accel_ms: float) -> Optional[float]:
+    def calibrated_ms(self, key: str, bucket: int, accel_ms: float,
+                      n_devices: int = 1,
+                      fingerprint: Optional[str] = None) -> Optional[float]:
         """Calibrated wall-ms for an accelerator prediction, or None.
 
-        Resolution order: the (model, bucket) cell once it has
-        ``min_samples`` observations, else the pooled per-model fit once
-        *it* has ``min_samples`` (keeps every bucket of a model in the same
-        units as soon as any bucket has data), else None (caller falls back
-        to raw accelerator-ms)."""
+        Resolution order: the (model, bucket, n_devices) cell once it has
+        ``min_samples`` observations, else the pooled per-(model,
+        n_devices) fit once *it* has ``min_samples`` (keeps every bucket of
+        a model in the same units as soon as any bucket has data), else the
+        model's best-sampled pooled fit at ANY mesh width, else None
+        (caller falls back to raw accelerator-ms).
+
+        The cross-width fallback matters for SLO admission under sharding:
+        admission prices a model's drain on the full mesh, but cross-model
+        rounds execute it on smaller groups, so the full-mesh cells may
+        never accumulate samples.  A scale borrowed from another width is
+        approximate (per-width dispatch overheads differ) but keeps the
+        whole admission sum in wall-ms — raw accel-ms would be orders of
+        magnitude off and silently over-admit.  A mismatching
+        ``fingerprint`` drops the stale fits and returns None."""
         with self._lock:
-            cell = self._cells.get((key, bucket))
+            if not self._check_fingerprint_locked(key, fingerprint):
+                return None
+            cell = self._cells.get((key, bucket, n_devices))
             if cell is not None and cell.n >= self.min_samples:
                 scale = cell.scale
                 if scale is not None:
                     return scale * accel_ms
-            pooled = self._pooled.get(key)
+            pooled = self._pooled.get((key, n_devices))
             if pooled is not None and pooled.n >= self.min_samples:
                 scale = pooled.scale
                 if scale is not None:
                     return scale * accel_ms
+            others = [f for (k, nd), f in self._pooled.items()
+                      if k == key and f.n >= self.min_samples
+                      and f.scale is not None]
+            if others:
+                return max(others, key=lambda f: f.n).scale * accel_ms
             return None
 
     def snapshot(self) -> Dict:
-        """{model: {"pooled": fit, "buckets": {bucket: fit}}} summaries."""
+        """{model: {"pooled": fit, "buckets": {label: fit}}} summaries.
+        Bucket labels are strings: ``"<bucket>"`` for single-device cells,
+        ``"<bucket>x<n_devices>"`` for sharded ones (and sharded pooled
+        fits ``"pooled@x<n_devices>"``)."""
         with self._lock:
             out: Dict[str, Dict] = {}
-            for key, fit in self._pooled.items():
-                out[key] = {"pooled": fit.summary(), "buckets": {}}
-            for (key, bucket), fit in self._cells.items():
+            for (key, nd), fit in self._pooled.items():
+                entry = out.setdefault(key, {"pooled": {}, "buckets": {}})
+                if nd == 1:
+                    entry["pooled"] = fit.summary()
+                else:
+                    entry[f"pooled@x{nd}"] = fit.summary()
+            for (key, bucket, nd), fit in self._cells.items():
                 s = fit.summary()
                 s["calibrated"] = fit.n >= self.min_samples
-                out.setdefault(key, {"pooled": {}, "buckets": {}})
-                out[key]["buckets"][bucket] = s
+                entry = out.setdefault(key, {"pooled": {}, "buckets": {}})
+                label = str(bucket) if nd == 1 else f"{bucket}x{nd}"
+                entry["buckets"][label] = s
+            for key, fp in self._fps.items():
+                if key in out:
+                    out[key]["fingerprint"] = fp
             return out

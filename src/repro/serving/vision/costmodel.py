@@ -1,14 +1,26 @@
 """Cost model: ST-OS systolic latency estimates driving scheduling decisions.
 
+Units: ``predicted_ms`` is **accelerator milliseconds** (accel-ms) from the
+ST-OS simulator — the paper machine's clock; ``expected_ms`` returns
+calibrated **wall milliseconds** (wall-ms) once the ``LatencyCalibrator``
+has converged for a cell, accel-ms before (the ``calibrated`` flag says
+which).  Measured batch times fed to ``observe`` are always wall-ms.
+
 The systolic simulator (``repro.systolic.simulator``) gives a per-network,
 per-batch latency estimate for the paper's accelerator — for free, from the
 same operator IR the counting/benchmark stack uses.  The serving engine
-uses it three ways:
+uses it four ways:
 
   * bucket selection — among the fixed batch buckets, run the one that
     maximizes delivered images per predicted millisecond (padding a batch
     to a bigger bucket is wasted compute; a too-small bucket leaves queued
     work waiting for another pass);
+  * round composition — ``plan_round`` maps the models that currently have
+    queued work onto device groups of the mesh (the ST-OS trick of mapping
+    independent convolutions onto independent array rows, lifted to the
+    fleet: independent models fill independent devices).  A batch sharded
+    over ``g`` devices is priced as the per-device microbatch
+    (``bucket / g``), and the round costs the slowest device group;
   * admission control — a request with an SLO is rejected up front when the
     predicted time to drain the queue ahead of it (plus its own batch)
     already exceeds the SLO;
@@ -21,7 +33,7 @@ after registration, so each point is simulated at most once per process.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.systolic.arrays import PAPER_CONFIG, SystolicConfig
 from repro.systolic.simulator import NetworkSim, simulate_network
@@ -36,20 +48,58 @@ class BucketPlan:
     served: int                  # requests actually in the batch
     predicted_ms: float          # expected latency for the whole batch
     calibrated: bool = False     # True -> predicted_ms is calibrated wall-ms
+    n_devices: int = 1           # devices the batch is sharded over
 
     @property
     def imgs_per_ms(self) -> float:
         return self.served / self.predicted_ms if self.predicted_ms else 0.0
 
 
+@dataclasses.dataclass
+class RoundPart:
+    """One model's batch inside a co-scheduled cross-model round."""
+    key: str
+    plan: BucketPlan
+    group: int                   # device-group index within the round
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """A cross-model device round: one bucketed batch per model, models
+    assigned round-robin (FIFO order) to equal contiguous device groups.
+    ``predicted_ms`` is the slowest group's serial sum — groups run in
+    parallel, models sharing a group run back-to-back."""
+    parts: List[RoundPart]
+    n_devices: int               # mesh size the round was planned for
+    n_groups: int
+    predicted_ms: float
+
+    @property
+    def served(self) -> int:
+        return sum(p.plan.served for p in self.parts)
+
+
+def round_groups(n_models: int, n_devices: int) -> int:
+    """Number of device groups for a round: the largest power of two that
+    divides ``n_devices`` and does not exceed ``n_models`` — every group
+    gets the same contiguous device count, every model gets a group."""
+    assert n_models >= 1 and n_devices >= 1
+    k = 1
+    while k * 2 <= min(n_models, n_devices) and n_devices % (k * 2) == 0:
+        k *= 2
+    return k
+
+
 class SystolicCostModel:
     def __init__(self, cfg: SystolicConfig = PAPER_CONFIG, *,
                  stos: bool = True, baseline_dataflow: str = "OS",
-                 calibrator: Optional[LatencyCalibrator] = None):
+                 calibrator: Optional[LatencyCalibrator] = None,
+                 n_devices: int = 1):
         self.cfg = cfg
         self.stos = stos
         self.baseline_dataflow = baseline_dataflow
         self.calibrator = calibrator
+        self.n_devices = max(1, int(n_devices))
         self._cache: Dict[Tuple[str, int], float] = {}
 
     # -- latency ------------------------------------------------------------
@@ -65,72 +115,152 @@ class SystolicCostModel:
             self._cache[key] = self.simulate(model, batch).latency_ms
         return self._cache[key]
 
-    def expected_ms(self, model: RegisteredModel,
-                    batch: int) -> Tuple[float, bool]:
+    def fingerprint(self, model: RegisteredModel) -> str:
+        """Tag for calibration fits: which backend and mesh shape produced
+        the wall-ms observations.  A change within one process invalidates
+        the model's fits (see ``LatencyCalibrator``)."""
+        backend = getattr(model, "backend", None)
+        bk = getattr(backend, "key", "?")
+        return f"{bk}|ndev={self.n_devices}"
+
+    def shard_width(self, bucket: int, group_size: int) -> int:
+        """Devices a bucket actually shards over inside a ``group_size``
+        group: the whole group when the batch divides evenly, else 1
+        (replicated-batch execution keeps results bitwise-identical)."""
+        g = max(1, int(group_size))
+        return g if g > 1 and bucket % g == 0 else 1
+
+    def sharded_accel_ms(self, model: RegisteredModel, bucket: int,
+                         n_devices: int) -> float:
+        """Accel-ms for a bucket data-parallel over ``n_devices``: devices
+        run per-device microbatches concurrently, so the batch costs one
+        microbatch (``bucket`` must divide evenly — see shard_width)."""
+        assert bucket % n_devices == 0, (bucket, n_devices)
+        return self.predicted_ms(model, bucket // n_devices)
+
+    def expected_ms(self, model: RegisteredModel, batch: int,
+                    n_devices: int = 1) -> Tuple[float, bool]:
         """(latency, calibrated?) — calibrated wall-ms once the calibrator
-        has enough observations for this model, raw accelerator-ms before."""
-        accel = self.predicted_ms(model, batch)
+        has enough observations for this cell, raw accelerator-ms before."""
+        accel = self.sharded_accel_ms(model, batch, n_devices)
         if self.calibrator is not None:
-            wall = self.calibrator.calibrated_ms(model.key, batch, accel)
+            wall = self.calibrator.calibrated_ms(
+                model.key, batch, accel, n_devices=n_devices,
+                fingerprint=self.fingerprint(model))
             if wall is not None:
                 return wall, True
         return accel, False
 
     def observe(self, model: RegisteredModel, batch: int,
-                measured_ms: float) -> Optional[float]:
+                measured_ms: float, n_devices: int = 1) -> Optional[float]:
         """Feed one completed batch's measured wall latency back into the
         calibrator; returns the calibration residual when available."""
         if self.calibrator is None:
             return None
-        return self.calibrator.observe(model.key, batch,
-                                       self.predicted_ms(model, batch),
-                                       measured_ms)
+        return self.calibrator.observe(
+            model.key, batch, self.sharded_accel_ms(model, batch, n_devices),
+            measured_ms, n_devices=n_devices,
+            fingerprint=self.fingerprint(model))
 
     # -- scheduling ---------------------------------------------------------
     def plan_bucket(self, model: RegisteredModel, queued: int,
-                    buckets: Sequence[int]) -> BucketPlan:
-        """Best bucket for ``queued`` waiting requests of one model.
+                    buckets: Sequence[int],
+                    group_size: Optional[int] = None) -> BucketPlan:
+        """Best bucket for ``queued`` waiting requests of one model on a
+        ``group_size``-device group (default: the full mesh).
 
         Maximizes delivered images per predicted ms; ties break toward the
         smaller bucket (less padded compute, lower batch latency).
         """
         assert queued >= 1
+        g = self.n_devices if group_size is None else group_size
         best: Optional[BucketPlan] = None
         for b in sorted(buckets):
-            ms, cal = self.expected_ms(model, b)
-            plan = BucketPlan(b, min(queued, b), ms, cal)
+            e = self.shard_width(b, g)
+            ms, cal = self.expected_ms(model, b, n_devices=e)
+            plan = BucketPlan(b, min(queued, b), ms, cal, n_devices=e)
             if best is None or plan.imgs_per_ms > best.imgs_per_ms * (1 + 1e-9):
                 best = plan
         assert best is not None
         return best
 
+    def plan_round(self, models: Sequence[Tuple[RegisteredModel, int]],
+                   buckets: Sequence[int]) -> RoundPlan:
+        """Compose one cross-model device round from ``models`` — FIFO-
+        ordered (model, queued depth) pairs, every entry with depth >= 1.
+
+        The mesh splits into ``round_groups`` equal contiguous groups and
+        models are dealt to groups round-robin in FIFO order, so the oldest
+        models land on distinct groups and run concurrently; each model's
+        batch is planned for (and sharded over) its group.  The round's
+        predicted latency is the slowest group's serial sum."""
+        assert models
+        k = round_groups(len(models), self.n_devices)
+        g = self.n_devices // k
+        parts: List[RoundPart] = []
+        group_ms = [0.0] * k
+        for i, (model, depth) in enumerate(models):
+            plan = self.plan_bucket(model, depth, buckets, group_size=g)
+            grp = i % k
+            parts.append(RoundPart(model.key, plan, grp))
+            group_ms[grp] += plan.predicted_ms
+        return RoundPlan(parts, self.n_devices, k, max(group_ms))
+
     def drain_ms(self, model: RegisteredModel, queued: int,
-                 buckets: Sequence[int]) -> float:
-        """Predicted time to serve ``queued`` requests with greedy batching."""
+                 buckets: Sequence[int],
+                 group_size: Optional[int] = None) -> float:
+        """Predicted time to serve ``queued`` requests with greedy batching
+        on a ``group_size``-device group (default: the full mesh)."""
         total = 0.0
         remaining = queued
         while remaining > 0:
-            plan = self.plan_bucket(model, remaining, buckets)
+            plan = self.plan_bucket(model, remaining, buckets,
+                                    group_size=group_size)
             total += plan.predicted_ms
             remaining -= plan.served
+        return total
+
+    def drain_rounds_ms(self, models: Sequence[Tuple[RegisteredModel, int]],
+                        buckets: Sequence[int]) -> float:
+        """Predicted time for the round scheduler to drain a queue
+        snapshot: rounds are composed exactly as ``plan_round`` would and
+        their latencies summed until every model's depth reaches zero."""
+        depths = [[model, depth] for model, depth in models if depth > 0]
+        total = 0.0
+        while depths:
+            plan = self.plan_round([(m, d) for m, d in depths], buckets)
+            total += plan.predicted_ms
+            for entry, part in zip(depths, plan.parts):
+                entry[1] -= part.plan.served
+            depths = [e for e in depths if e[1] > 0]
         return total
 
     # -- admission ----------------------------------------------------------
     def admit(self, model: RegisteredModel, slo_ms: Optional[float],
               queued: int, buckets: Sequence[int],
-              backlog_ms: float = 0.0) -> Tuple[bool, float]:
+              backlog_ms: float = 0.0,
+              group_size: Optional[int] = None) -> Tuple[bool, float]:
         """(admit?, predicted e2e ms) for a request arriving behind
         ``queued`` same-model requests and ``backlog_ms`` of predicted
-        other-model/in-flight work the FIFO scheduler will serve first.
-        Latencies are calibrated wall-ms once the calibrator has enough
-        observations (accelerator-ms before).  No SLO -> always admitted.
+        other-model/in-flight work the scheduler serves first.  Latencies
+        are calibrated wall-ms once the calibrator has enough observations
+        (accelerator-ms before).  No SLO -> always admitted.
+
+        ``group_size`` prices this model's own drain on the device group
+        the round scheduler would currently assign it (the engine passes
+        ``n_devices // round_groups(active models)``); defaulting to the
+        full mesh would under-predict — and silently over-admit —
+        whenever cross-model rounds place the model on a smaller group.
+        The ``backlog_ms`` side errs the other way (round drains price
+        group concurrency, in-flight work is charged serially).
 
         Known limitation: while SOME models are calibrated and others are
         not, the cross-model backlog sum mixes wall-ms and accel-ms, so
         admission can under-count the uncalibrated models' share until
         every model has served ``min_samples`` batches (warm-up traffic —
         the launcher's ``--warm-bursts`` — closes this window)."""
-        predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
+        predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets,
+                                               group_size=group_size)
         if slo_ms is None:
             return True, predicted
         return predicted <= slo_ms, predicted

@@ -1,5 +1,12 @@
 """VisionServeEngine: batched FuSeConv inference with cost-model scheduling
-and an async pipelined executor.
+and an async pipelined executor; under a device mesh, a cross-model round
+scheduler shards batches over device groups.
+
+Units: every latency in this module is **wall milliseconds** measured on
+``clock`` (``time.perf_counter`` unless a test injects a fake); the cost
+model's ``predicted_ms`` may be raw **accelerator-ms** before calibration
+converges — ``VisionResult.calibrated`` flags which unit a prediction was
+quoted in.
 
 Request lifecycle:
 
@@ -27,6 +34,23 @@ Request lifecycle:
       The submit/complete queues are bounded by ``max_in_flight``, so host
       batching of batch N+1 overlaps device execution of batch N without
       ever racing unboundedly ahead of the device.
+
+  cross-model round scheduler (``cross_model=True``, the default whenever
+  the registry carries a mesh) — the ST-OS row-mapping idea lifted to the
+  fleet: just as the paper maps *independent* 1-D convolutions onto rows of
+  the systolic array to saturate it, the scheduler maps independent models'
+  batches onto device groups of the mesh.  Each cycle it snapshots every
+  model with queued work, asks the cost model for a ``RoundPlan`` (one
+  bucket per model, models dealt round-robin onto equal contiguous device
+  groups, round latency = slowest group), pops all models atomically
+  (``RequestQueue.pop_many``), and ships the round as ONE unit: the device
+  thread dispatches every part (async dispatch — parts on different groups
+  execute concurrently), the completer blocks on each part in turn and fans
+  results back to per-request futures.  A round holds one ``max_in_flight``
+  slot.  Each part's measured latency is charged from the round's service
+  start to that part's readiness — for a marginal SLO decision that is the
+  quantity that matters ("when is my batch done"), and it over- rather than
+  under-estimates shared-group parts.
 
   flush()
       -> waits for the pipeline to drain (or, with ``pipelined=False``,
@@ -56,11 +80,11 @@ import numpy as np
 
 from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
-                                          form_batch)
+                                          form_batch, form_round)
 from repro.serving.vision.calibrate import LatencyCalibrator
 from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
 from repro.serving.vision.metrics import ServeMetrics
-from repro.serving.vision.registry import ModelRegistry
+from repro.serving.vision.registry import ModelRegistry, device_groups
 
 
 @dataclasses.dataclass
@@ -76,6 +100,7 @@ class VisionResult:
     bucket: int = 0
     batch_fill: int = 0
     calibrated: bool = False          # predicted_ms was calibrated wall-ms
+    n_devices: int = 1                # devices the batch was sharded over
     error: Optional[str] = None       # exception text for status "error"
 
 
@@ -110,6 +135,16 @@ class _Prepared:
     """A formed batch travelling through the submit/complete queues."""
     batch: Batch
     plan: BucketPlan
+    devices: Optional[tuple] = None   # device group (round scheduler only)
+
+
+@dataclasses.dataclass
+class _Round:
+    """A co-scheduled cross-model round travelling as ONE pipeline unit
+    (one ``max_in_flight`` slot, one in-flight increment)."""
+    parts: List[_Prepared]
+    predicted_ms: float               # slowest device group's serial sum
+    n_groups: int
 
 
 @dataclasses.dataclass
@@ -129,10 +164,28 @@ class VisionServeEngine:
                  clock=time.perf_counter,
                  pipelined: bool = True,
                  max_in_flight: int = 2,
-                 batch_window_ms: float = 0.0):
+                 batch_window_ms: float = 0.0,
+                 cross_model: Optional[bool] = None):
         self.registry = registry
+        # mesh comes in through the registry (it owns placement); the
+        # engine owns scheduling over its device list
+        self._devices = getattr(registry, "devices", None)
+        ndev = len(self._devices) if self._devices else 1
         self.cost_model = cost_model or SystolicCostModel(
-            calibrator=LatencyCalibrator())
+            calibrator=LatencyCalibrator(), n_devices=ndev)
+        # cross-model rounds default on whenever a mesh is present; they
+        # also work without one (rounds of size |models| on one device)
+        self.cross_model = (self._devices is not None
+                            if cross_model is None else bool(cross_model))
+        cm_ndev = getattr(self.cost_model, "n_devices", None)
+        if self._devices is not None and cm_ndev is not None \
+                and cm_ndev != ndev:
+            # a planner sized for a different mesh would hand the round
+            # scheduler group counts that don't partition the device list
+            raise ValueError(
+                f"cost model plans for {cm_ndev} device(s) but the "
+                f"registry mesh has {ndev}; construct the cost model with "
+                f"n_devices={ndev}")
         self.buckets = tuple(sorted(buckets))
         self.metrics = metrics or ServeMetrics(clock)
         self._clock = clock
@@ -183,9 +236,21 @@ class VisionServeEngine:
             self._next_rid += 1
         self.metrics.on_submit()
         if slo_ms is not None:
+            extra = {}
+            if self.cross_model and self._devices \
+                    and hasattr(self.cost_model, "plan_round"):
+                # price this model's own drain on the device group the
+                # round planner would assign it right now — the full mesh
+                # would under-predict (and over-admit) whenever rounds
+                # split the mesh across active models
+                from repro.serving.vision.costmodel import round_groups
+                active = {m for m, _, _ in self._queue.snapshot()}
+                active.add(model_key)
+                ndev = len(self._devices)
+                extra["group_size"] = ndev // round_groups(len(active), ndev)
             admitted, predicted = self.cost_model.admit(
                 model, slo_ms, self._queue.pending(model_key), self.buckets,
-                self._backlog_ms(model_key))
+                self._backlog_ms(model_key), **extra)
             if not admitted:
                 self.metrics.on_reject()
                 res = VisionResult(rid, model_key, "rejected", None,
@@ -217,13 +282,21 @@ class VisionServeEngine:
             return self._futures[rid]
 
     def _backlog_ms(self, model_key: str) -> float:
-        """Predicted work the FIFO scheduler serves before a new
-        ``model_key`` request: every other model's queued drain plus all
-        batches already in flight through the pipeline."""
-        other = sum(
-            self.cost_model.drain_ms(self.registry.get(m), depth,
-                                     self.buckets)
-            for m, depth, _ in self._queue.snapshot() if m != model_key)
+        """Predicted work the scheduler serves before a new ``model_key``
+        request: every other model's queued drain plus all batches already
+        in flight through the pipeline.  Under the round scheduler the
+        other models' drain is priced as the rounds it would actually form
+        (concurrent device groups), not a serial per-model sum."""
+        snap = self._queue.snapshot()
+        if self.cross_model and hasattr(self.cost_model, "drain_rounds_ms"):
+            other = self.cost_model.drain_rounds_ms(
+                [(self.registry.get(m), depth) for m, depth, _ in snap
+                 if m != model_key], self.buckets)
+        else:
+            other = sum(
+                self.cost_model.drain_ms(self.registry.get(m), depth,
+                                         self.buckets)
+                for m, depth, _ in snap if m != model_key)
         with self._lock:
             return other + self._inflight_pred_ms
 
@@ -298,6 +371,14 @@ class VisionServeEngine:
                 if self._closing and not self._drain_on_close:
                     self._depth_sem.release()
                     break
+                if self.cross_model:
+                    # round scheduler: one batch per model with queued work,
+                    # co-scheduled onto device groups; holds the slot just
+                    # acquired (released via _round_done / _fail)
+                    item = self._form_round()
+                    if item is not None:
+                        self._submit_q.put(item)       # backpressure
+                    continue
                 model = self.registry.get(model_key)
                 t_h0 = self._clock()
                 try:
@@ -332,6 +413,73 @@ class VisionServeEngine:
         finally:
             self._submit_q.put(_STOP)
 
+    def _form_round(self) -> Optional["_Round"]:
+        """Plan, pop, and form one cross-model round.  The caller has
+        already acquired ONE depth slot for the whole round; every exit
+        path either hands it to the returned round (released by the
+        completer via ``_round_done``) or releases it here."""
+        entries = self._queue.snapshot()
+        if not entries:
+            self._depth_sem.release()
+            return None
+        models = [(self.registry.get(m), d) for m, d, _ in entries]
+        t_h0 = self._clock()
+        try:
+            rplan = self.cost_model.plan_round(models, self.buckets)
+            # resolved before any request is popped: a plan whose group
+            # count can't partition the device list must fail HERE, where
+            # containment below still owns every queued request
+            groups = (device_groups(self._devices, rplan.n_groups)
+                      if self._devices else [None] * rplan.n_groups)
+        except Exception as exc:
+            # planner failure: fail everything currently queued rather than
+            # retrying the same exception forever (same invariant as the
+            # single-model path: count in flight BEFORE popping)
+            with self._lock:
+                self._inflight_batches += 1
+            self.metrics.on_inflight(+1)
+            reqs = [r for m, d, _ in entries for r in self._queue.pop(m, d)]
+            self._fail(reqs, None, exc, in_flight=True)
+            return None
+        with self._lock:
+            # counted BEFORE the atomic pop so flush never observes an
+            # empty queue while the round is being formed
+            self._inflight_batches += 1
+            self._inflight_pred_ms += rplan.predicted_ms
+        self.metrics.on_inflight(+1)
+        pops = self._queue.pop_many([(p.key, p.plan.served)
+                                     for p in rplan.parts])
+        formed = form_round(
+            [(reqs, part.plan.bucket, self.registry.get(part.key).resolution)
+             for part, reqs in zip(rplan.parts, pops)])
+        parts: List[_Prepared] = []
+        for part, reqs, batch in zip(rplan.parts, pops, formed):
+            if batch is None:
+                continue
+            if isinstance(batch, BaseException):
+                # a malformed part must not sink the whole round: fail its
+                # requests, keep the others (round slot released at the end)
+                self._fail(reqs, part.plan, batch, in_flight=False)
+                continue
+            parts.append(_Prepared(batch, part.plan,
+                                   devices=groups[part.group]))
+        self.metrics.on_stage("host", self._clock() - t_h0)
+        if not parts:
+            self._round_done(rplan.predicted_ms)
+            return None
+        self.metrics.on_round(len(parts), rplan.n_groups)
+        return _Round(parts, rplan.predicted_ms, rplan.n_groups)
+
+    def _round_done(self, predicted_ms: float) -> None:
+        """Release a round's in-flight accounting and depth slot."""
+        with self._done_cv:
+            self._inflight_batches -= 1
+            self._inflight_pred_ms = max(
+                0.0, self._inflight_pred_ms - predicted_ms)
+            self._done_cv.notify_all()
+        self.metrics.on_inflight(-1)
+        self._depth_sem.release()
+
     def _device_loop(self) -> None:
         try:
             while True:
@@ -339,6 +487,22 @@ class VisionServeEngine:
                 if item is _STOP:
                     break
                 t0 = self._clock()
+                if isinstance(item, _Round):
+                    # dispatch every part back-to-back: dispatch is async,
+                    # so parts on different device groups execute
+                    # concurrently (independent models -> independent
+                    # devices); the completer blocks on readiness
+                    outs = []
+                    for p in item.parts:
+                        try:
+                            logits = self.registry.apply(
+                                p.batch.model, p.batch.images,
+                                devices=p.devices)
+                        except Exception as exc:
+                            logits = _BatchError(exc)
+                        outs.append((p, logits, self._clock()))
+                    self._complete_q.put((item, outs, t0))
+                    continue
                 try:
                     logits = self.registry.apply(item.batch.model,
                                                  item.batch.images)
@@ -348,6 +512,29 @@ class VisionServeEngine:
         finally:
             self._complete_q.put(_STOP)
 
+    def _complete_round(self, rnd: "_Round", outs, t0: float,
+                        t_prev: Optional[float]) -> float:
+        """Resolve every part of a dispatched round; returns the new
+        ``t_prev`` (device-timeline watermark).  Part latency is charged
+        from the round's service start to that part's readiness — the
+        "when is my batch done" quantity admission control predicts."""
+        t_start = t0 if t_prev is None else max(t0, t_prev)
+        for p, logits, t_disp in outs:
+            try:
+                if isinstance(logits, _BatchError):
+                    raise logits.exc
+                logits = jax.block_until_ready(logits)
+                t1 = self._clock()
+                self._finalize(p, np.asarray(logits), t_disp, t1,
+                               in_flight=False,
+                               service_start=max(t_disp, t_start))
+            except Exception as exc:
+                self._fail(p.batch.requests, p.plan, exc, in_flight=False)
+        t_end = self._clock()
+        self.metrics.on_stage("device", t_end - t_start)
+        self._round_done(rnd.predicted_ms)
+        return t_end
+
     def _completer_loop(self) -> None:
         t_prev: Optional[float] = None
         while True:
@@ -355,6 +542,9 @@ class VisionServeEngine:
             if got is _STOP:
                 break
             item, logits, t0 = got
+            if isinstance(item, _Round):
+                t_prev = self._complete_round(item, logits, t0, t_prev)
+                continue
             try:
                 if isinstance(logits, _BatchError):
                     raise logits.exc
@@ -412,8 +602,14 @@ class VisionServeEngine:
         batch, plan = item.batch, item.plan
         model_key = batch.model
         run_ms = (t1 - (t0 if service_start is None else service_start)) * 1e3
-        resid = self.cost_model.observe(self.registry.get(model_key),
-                                        plan.bucket, run_ms)
+        nd = getattr(plan, "n_devices", 1)
+        if nd == 1:
+            resid = self.cost_model.observe(self.registry.get(model_key),
+                                            plan.bucket, run_ms)
+        else:
+            resid = self.cost_model.observe(self.registry.get(model_key),
+                                            plan.bucket, run_ms,
+                                            n_devices=nd)
         self.metrics.on_batch(model_key, batch.fill, plan.bucket, run_ms,
                               plan.predicted_ms, calibrated=plan.calibrated,
                               resid_ms=resid)
@@ -424,7 +620,8 @@ class VisionServeEngine:
                 logits=logits_np[i], predicted_ms=plan.predicted_ms,
                 queue_ms=(t0 - r.t_submit) * 1e3, run_ms=run_ms,
                 e2e_ms=(t1 - r.t_submit) * 1e3, bucket=plan.bucket,
-                batch_fill=batch.fill, calibrated=plan.calibrated))
+                batch_fill=batch.fill, calibrated=plan.calibrated,
+                n_devices=nd))
         # publish results and resolve futures BEFORE signalling completion:
         # a flush() woken by the notify clears self._futures, so a future
         # resolved after the notify could be lost to a concurrent waiter
@@ -452,13 +649,34 @@ class VisionServeEngine:
                buckets: Optional[Sequence[int]] = None) -> None:
         """Prewarm every (model, bucket) pair off the serving path: seed the
         cost model's simulator cache, then both pipeline stages (host batch
-        formation and device jit compile) via the registry hooks."""
+        formation and device jit compile) via the registry hooks.  Under
+        the round scheduler this also warms each model's round-robin device
+        group, so the first cross-model round never compiles under
+        traffic."""
         bks = tuple(buckets) if buckets is not None else self.buckets
-        for k in (keys if keys is not None else self.registry.keys()):
+        ks = list(keys if keys is not None else self.registry.keys())
+        groups: List[tuple] = []
+        if self.cross_model and self._devices and len(self._devices) > 1 \
+                and hasattr(self.cost_model, "plan_round"):
+            from repro.serving.vision.costmodel import round_groups
+            # group assignment is by FIFO position, so over time a model
+            # can land on ANY group of any reachable partition width —
+            # warm them all, or the first round on a fresh group compiles
+            # under traffic
+            widths = {round_groups(m, len(self._devices))
+                      for m in range(1, len(ks) + 1)}
+            for k_groups in sorted(widths):
+                if k_groups > 1:        # full mesh is warmed by default
+                    groups.extend(device_groups(self._devices, k_groups))
+        for k in ks:
             model = self.registry.get(k)
             for b in bks:
                 self.cost_model.predicted_ms(model, b)
-            self.registry.prewarm(k, bks)
+            for grp in groups:
+                # seed the sharded simulator points (per-device microbatch)
+                self.cost_model.plan_bucket(model, max(bks), bks,
+                                            group_size=len(grp))
+            self.registry.prewarm(k, bks, groups=groups or None)
 
     def step(self) -> List[VisionResult]:
         """Synchronously run ONE batch on the caller's thread (the

@@ -3,6 +3,15 @@
 Pure-Python accounting (no jax): every number here is host-side bookkeeping
 around the jitted compute, so importing this module never touches a device.
 
+Units: every ``*_ms`` here is measured **wall milliseconds** on the
+engine's clock, and every ``*_s`` wall seconds — with one deliberate
+exception: ``cost_model_abs_err_ms`` compares a measured wall-ms against
+the prediction *in whatever unit the scheduler quoted at decision time*
+(calibrated wall-ms once converged, raw ST-OS accel-ms during warm-up), so
+early samples of that one stat mix units by construction.
+``calibration_abs_resid_ms`` only records once calibrated and is pure
+wall-ms.
+
 Latency tables are **request-weighted**: ``run`` records the batch compute
 time once per request served by that batch, not once per batch, so p99
 under mixed bucket sizes reflects what requests actually experienced (a
@@ -104,6 +113,11 @@ class ServeMetrics:
         self.max_in_flight = 0
         self.host_busy_s = 0.0         # scheduling + letterbox/batch formation
         self.device_busy_s = 0.0       # dispatch -> block_until_ready
+        # cross-model round scheduler
+        self.rounds = 0                # co-scheduled device rounds dispatched
+        self.cross_model_rounds = 0    # rounds carrying >1 model
+        self.max_round_models = 0      # widest round (models co-scheduled)
+        self.max_round_groups = 0      # widest round (device groups used)
 
     def reset(self) -> None:
         """Zero every counter/distribution (e.g. after warm-up traffic so a
@@ -154,6 +168,16 @@ class ServeMetrics:
             if run_ms is not None:
                 self._stat(self.run, model).record(run_ms)
 
+    def on_round(self, n_models: int, n_groups: int) -> None:
+        """One cross-model round dispatched: ``n_models`` batches
+        co-scheduled over ``n_groups`` device groups."""
+        with self._lock:
+            self.rounds += 1
+            if n_models > 1:
+                self.cross_model_rounds += 1
+            self.max_round_models = max(self.max_round_models, n_models)
+            self.max_round_groups = max(self.max_round_groups, n_groups)
+
     # -- pipeline occupancy ---------------------------------------------------
     def on_inflight(self, delta: int) -> None:
         with self._lock:
@@ -201,6 +225,10 @@ class ServeMetrics:
                 "calibrated_batches": self.calibrated_batches,
                 "padded_slots": self.padded_slots,
                 "throughput_ips": self.throughput_ips,
+                "rounds": self.rounds,
+                "cross_model_rounds": self.cross_model_rounds,
+                "max_round_models": self.max_round_models,
+                "max_round_groups": self.max_round_groups,
                 "max_in_flight": self.max_in_flight,
                 "host_busy_s": self.host_busy_s,
                 "device_busy_s": self.device_busy_s,

@@ -6,15 +6,31 @@ initialized (or loaded) params, the lowered operator IR (for the systolic
 cost model), and the execution backend.  ``ModelRegistry.apply`` dispatches
 through a jit cache keyed by ``(model key, batch bucket)`` so every bucket
 compiles exactly once and mixed traffic never re-traces.
+
+Sharding: constructed with a ``jax.sharding`` mesh carrying a ``"data"``
+axis (see ``repro.launch.mesh.make_data_mesh``), the registry executes each
+batch data-parallel over a device group — params replicated over the group
+(``NamedSharding(mesh, P())``), the batch axis sharded over ``"data"`` when
+the bucket divides the group size, replicated otherwise (replication keeps
+per-example results bitwise-identical to the unsharded path; only the
+placement changes).  The jit cache key grows to ``(model key, bucket,
+device-group ids)`` and per-group parameter placements are cached, so the
+round scheduler's handful of power-of-two contiguous groups each compile
+exactly once.  Testable on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+All latencies around this module are wall-clock; the registry itself does
+no timing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.layerir import OpSpec
 from repro.kernels import backend as kb
@@ -46,13 +62,36 @@ def default_model_key(net_name: str, variant: Union[str, tuple]) -> str:
     return f"{net_name}/{v}"
 
 
-class ModelRegistry:
-    """Servable models + the (key, bucket) -> jitted-apply cache."""
+def device_groups(devices: Sequence, k: int) -> List[tuple]:
+    """Split ``devices`` into ``k`` equal contiguous groups (the round
+    scheduler's analogue of assigning independent convolutions to
+    independent systolic-array rows)."""
+    assert k >= 1 and len(devices) % k == 0, (len(devices), k)
+    g = len(devices) // k
+    return [tuple(devices[i * g:(i + 1) * g]) for i in range(k)]
 
-    def __init__(self, backend: Union[str, kb.Backend, None] = None):
+
+class ModelRegistry:
+    """Servable models + the (key, bucket[, device group]) -> jit cache."""
+
+    def __init__(self, backend: Union[str, kb.Backend, None] = None,
+                 mesh=None):
         self.backend = kb.resolve_backend(backend)
+        self.mesh = mesh
+        if mesh is not None:
+            assert "data" in mesh.axis_names, mesh.axis_names
+            self.devices: Optional[tuple] = tuple(
+                np.asarray(mesh.devices).flatten().tolist())
+        else:
+            self.devices = None
         self._models: Dict[str, RegisteredModel] = {}
-        self._jit: Dict[Tuple[str, int], Callable] = {}
+        self._jit: Dict[tuple, Callable] = {}
+        self._group_meshes: Dict[Tuple[int, ...], Mesh] = {}
+        self._placed_params: Dict[Tuple[str, Tuple[int, ...]], list] = {}
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices) if self.devices else 1
 
     # -- registration -------------------------------------------------------
     def register(self, net: zoo.NetworkDef, variant: Union[str, tuple]
@@ -97,19 +136,57 @@ class ModelRegistry:
             self._jit[cache_key] = self._build_apply(self._models[key])
         return self._jit[cache_key]
 
-    def apply(self, key: str, images) -> jax.Array:
-        """images: (bucket, res, res, C) — must already be bucket-padded."""
+    def _group_mesh(self, devices: tuple) -> Mesh:
+        ids = tuple(d.id for d in devices)
+        if ids not in self._group_meshes:
+            self._group_meshes[ids] = Mesh(np.array(list(devices)),
+                                           ("data",))
+        return self._group_meshes[ids]
+
+    def _params_for(self, key: str, devices: tuple) -> list:
+        """Model params replicated over a device group (cached placement)."""
+        ids = tuple(d.id for d in devices)
+        cache_key = (key, ids)
+        if cache_key not in self._placed_params:
+            gmesh = self._group_mesh(devices)
+            self._placed_params[cache_key] = jax.device_put(
+                self._models[key].params, NamedSharding(gmesh, P()))
+        return self._placed_params[cache_key]
+
+    def apply(self, key: str, images,
+              devices: Optional[Sequence] = None) -> jax.Array:
+        """images: (bucket, res, res, C) — must already be bucket-padded.
+
+        ``devices``: the device group to execute on (defaults to the whole
+        mesh when one was given at construction, else the legacy
+        single-device path).  The batch shards over the group when the
+        bucket divides it; otherwise it is replicated (bitwise-identical
+        results either way)."""
         model = self._models[key]
-        bucket = images.shape[0]
         x = jnp.asarray(images)
-        return self.apply_fn(key, bucket)(model.params, x)
+        bucket = x.shape[0]
+        if devices is None and self.devices is None:
+            return self.apply_fn(key, bucket)(model.params, x)
+        devs = tuple(devices) if devices is not None else self.devices
+        gmesh = self._group_mesh(devs)
+        ids = tuple(d.id for d in devs)
+        spec = P("data") if len(devs) > 1 and bucket % len(devs) == 0 else P()
+        x = jax.device_put(x, NamedSharding(gmesh, spec))
+        params = self._params_for(key, devs)
+        cache_key = (key, bucket, ids)
+        if cache_key not in self._jit:
+            self._jit[cache_key] = self._build_apply(model)
+        return self._jit[cache_key](params, x)
 
     def prewarm(self, key: str, buckets, *, host: bool = True,
-                device: bool = True) -> None:
+                device: bool = True,
+                groups: Optional[Sequence[Sequence]] = None) -> None:
         """Warm the serving pipeline's stages off the hot path.
 
         device: trace + compile one jitted apply per (model, bucket) and run
-        it once, so the device stage never compiles under traffic.
+        it once, so the device stage never compiles under traffic.  Under a
+        mesh this warms the full-mesh placement; pass ``groups`` (tuples of
+        devices) to additionally warm the round scheduler's device groups.
         host: exercise the batch-formation path (letterbox + stack + bucket
         pad) per bucket, so first-request host latency doesn't pay numpy
         allocator / import warmup either.
@@ -123,10 +200,13 @@ class ModelRegistry:
             for b in buckets:
                 form_batch([VisionRequest(-1, key, img, 0.0)], b, res)
         if device:
-            for b in buckets:
-                out = self.apply(key, np.zeros((b, res, res, cin),
-                                               np.float32))
-                jax.block_until_ready(out)
+            targets = [None] + [tuple(g) for g in (groups or [])]
+            for devs in targets:
+                for b in buckets:
+                    out = self.apply(key, np.zeros((b, res, res, cin),
+                                                   np.float32),
+                                     devices=devs)
+                    jax.block_until_ready(out)
 
-    def compiled_buckets(self) -> List[Tuple[str, int]]:
-        return sorted(self._jit)
+    def compiled_buckets(self) -> List[tuple]:
+        return sorted(self._jit, key=lambda k: (k[0], k[1], len(k)))

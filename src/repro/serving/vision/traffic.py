@@ -1,28 +1,43 @@
 """Synthetic traffic generation shared by the example, launcher, and bench.
 
-One canonical mixed burst: round-robin across the registry's models, image
-extents drawn uniformly from [res/2, 2*res) so every request exercises the
-batcher's letterboxing, pixels standard-normal.  Deterministic per seed.
+One canonical mixed burst: round-robin across the registry's models (or a
+weighted draw — the multi-model serving workload), image extents drawn
+uniformly from [res/2, 2*res) so every request exercises the batcher's
+letterboxing, pixels standard-normal.  Deterministic per seed.
 
 ``make_mixed_burst`` only builds the items (so benchmarks can pre-generate
 traffic outside the timed region); ``submit_mixed_burst`` builds and
-submits them.
+submits them.  All times here are wall-clock seconds/ms (open-loop
+inter-arrival gaps); no accelerator units enter this module.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
-def make_mixed_burst(registry, n: int, *, seed: int = 0
+def make_mixed_burst(registry, n: int, *, seed: int = 0,
+                     weights: Optional[Sequence[float]] = None
                      ) -> List[Tuple[str, np.ndarray]]:
-    """``n`` mixed-size requests as [(model key, image)], not submitted."""
+    """``n`` mixed-size requests as [(model key, image)], not submitted.
+
+    ``weights`` (one per registry model, any positive scale) skews the
+    model mix — the multi-model serving workload where a hot model
+    dominates but every model keeps a steady trickle.  Default: strict
+    round-robin (every model equally loaded)."""
     rng = np.random.default_rng(seed)
     keys = registry.keys()
+    if weights is not None:
+        assert len(weights) == len(keys), (len(weights), len(keys))
+        p = np.asarray(weights, np.float64)
+        p = p / p.sum()
+        picks = rng.choice(len(keys), size=n, p=p)
+    else:
+        picks = [i % len(keys) for i in range(n)]
     out: List[Tuple[str, np.ndarray]] = []
     for i in range(n):
-        key = keys[i % len(keys)]
+        key = keys[int(picks[i])]
         res = registry.get(key).resolution
         h = int(rng.integers(res // 2, res * 2))
         w = int(rng.integers(res // 2, res * 2))

@@ -1,4 +1,10 @@
-"""Systolic-array hardware configuration (paper Table 1 defaults)."""
+"""Systolic-array hardware configuration (paper Table 1 defaults).
+
+Units: dimensions are PEs, SRAM sizes are KiB, ``freq_ghz`` is the array
+clock in GHz, bandwidth is bytes per accelerator **cycle**.
+``cycles_to_ms`` converts cycles to **accelerator milliseconds** (accel-ms)
+— simulated time on this array, never host wall time.
+"""
 from __future__ import annotations
 
 import dataclasses

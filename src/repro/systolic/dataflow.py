@@ -2,7 +2,11 @@
 
 SCALE-Sim is a trace-based cycle-accurate simulator; these are closed-form
 models of the same quantities (cycles, PE utilization, SRAM/DRAM traffic),
-keeping strict ``<= 1 MAC/PE/cycle`` physics.  Formulas:
+keeping strict ``<= 1 MAC/PE/cycle`` physics.
+
+Units: every latency in this module is accelerator **cycles** (convert to
+accel-ms via ``SystolicConfig.cycles_to_ms``); traffic is bytes; never
+host wall time.  Formulas:
 
 Output-Stationary GEMM  (M x K) . (K x N) on an (R x C) array
     folds          = ceil(M/R) * ceil(N/C)

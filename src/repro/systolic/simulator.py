@@ -5,6 +5,13 @@ chosen dataflow policy and aggregates latency / utilization / bandwidth.
 Policy (paper §3.3): runtime-configurable dataflow — ST-OS for FuSe 1-D
 convs, OS (or WS) for everything else.  DRAM bandwidth stalls are modeled
 per layer: stall = max(0, dram_bytes / BW - compute_cycles).
+
+Units: everything here is counted in accelerator **cycles** on the
+configured array; ``NetworkSim.latency_ms`` converts cycles to
+**accelerator milliseconds** (accel-ms) at ``SystolicConfig.freq_ghz`` —
+the paper machine's clock, NOT host wall time.  The serving stack's
+``LatencyCalibrator`` (repro.serving.vision.calibrate) owns the accel-ms
+-> wall-ms conversion; nothing in this package ever returns wall-ms.
 """
 from __future__ import annotations
 

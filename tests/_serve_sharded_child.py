@@ -1,0 +1,105 @@
+"""Subprocess child for tests/test_serve_sharded.py.
+
+Virtual devices must exist before jax initializes its backend, and the
+parent pytest process has long since initialized jax on the single real
+CPU device (tests/conftest.py keeps it that way on purpose) — so the
+sharded-serving checks run here, in a fresh process that forces 8 virtual
+CPU devices FIRST.  Prints one JSON dict on the last stdout line; the
+parent's tests assert on its fields, so one process launch (and one jax
+warmup) serves every test.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import json  # noqa: E402
+import sys   # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def main() -> None:
+    import jax
+
+    from repro.launch.mesh import make_data_mesh
+    from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
+                                      SystolicCostModel, VisionServeEngine,
+                                      fit_image, make_mixed_burst)
+    from repro.vision import zoo
+
+    out = {"devices": len(jax.devices())}
+    net = zoo.tiny_net(resolution=16, width=8)
+    mesh = make_data_mesh(8)
+    rng = np.random.default_rng(0)
+
+    # -- operator-level parity: sharded vs unsharded, per backend ----------
+    for backend in ("xla", "pallas"):
+        reg_s = ModelRegistry(backend=backend, mesh=mesh)
+        reg_u = ModelRegistry(backend=backend)
+        key = reg_s.register(net, "fuse_full").key
+        reg_u.register(net, "fuse_full")
+        # bucket 8 shards 1 image/device; bucket 4 does not divide 8 and
+        # runs replicated — both placements must be bitwise-identical to
+        # the meshless path
+        for bucket in (8, 4):
+            x = rng.standard_normal((bucket, 16, 16, 3)).astype(np.float32)
+            sharded = np.asarray(reg_s.apply(key, x))
+            unsharded = np.asarray(reg_u.apply(key, x))
+            out[f"parity_{backend}_b{bucket}"] = bool(
+                np.array_equal(sharded, unsharded))
+        # half-mesh device group (the round scheduler's 2-group split)
+        x = rng.standard_normal((4, 16, 16, 3)).astype(np.float32)
+        grp = reg_s.devices[:4]
+        out[f"parity_{backend}_group4"] = bool(np.array_equal(
+            np.asarray(reg_s.apply(key, x, devices=grp)),
+            np.asarray(reg_u.apply(key, x))))
+
+    # -- engine end-to-end: cross-model rounds, fan-back ordering ----------
+    reg = ModelRegistry(backend="xla", mesh=mesh)
+    reg.register(net, "depthwise")
+    reg.register(net, "fuse_full")
+    ref = ModelRegistry(backend="xla")
+    ref.register(net, "depthwise")
+    ref.register(net, "fuse_full")
+    cal = LatencyCalibrator(min_samples=2)
+    engine = VisionServeEngine(
+        reg, cost_model=SystolicCostModel(calibrator=cal, n_devices=8),
+        buckets=(1, 2, 4, 8), max_in_flight=2)
+    engine.warmup()
+    items = make_mixed_burst(reg, 16, seed=7)
+    rids = [engine.submit(k, img) for k, img in items]
+    results = engine.flush()
+    out["e2e_statuses_ok"] = all(r.status == "ok" for r in results)
+    out["e2e_rid_order"] = [r.rid for r in results] == sorted(rids)
+    # fan-back: every request's future must carry the logits of ITS OWN
+    # image (bitwise vs the unsharded single-image reference)
+    by_rid = {r.rid: r for r in results}
+    fanback = True
+    for rid, (k, img) in zip(rids, items):
+        x = fit_image(np.asarray(img, np.float32), 16)[None]
+        expect = np.asarray(ref.apply(k, x))[0]
+        if not np.array_equal(by_rid[rid].logits, expect):
+            fanback = False
+    out["e2e_fanback_bitwise"] = fanback
+    snap = engine.metrics.snapshot()
+    out["rounds"] = snap["rounds"]
+    out["cross_model_rounds"] = snap["cross_model_rounds"]
+    out["max_round_groups"] = snap["max_round_groups"]
+    out["sharded_results"] = sorted({r.n_devices for r in results})
+    # a second burst must reuse compiled entries (no unbounded cache
+    # growth from round scheduling) and feed sharded calibration cells
+    n_compiled = len(reg.compiled_buckets())
+    engine.generate(make_mixed_burst(reg, 16, seed=8))
+    out["jit_cache_stable"] = len(reg.compiled_buckets()) == n_compiled
+    out["calibration_sharded_cells"] = sorted(
+        {label for entry in cal.snapshot().values() if isinstance(entry, dict)
+         for label in entry.get("buckets", {}) if "x" in str(label)})
+    engine.close()
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

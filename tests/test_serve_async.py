@@ -6,7 +6,8 @@ when the device stage completes) and a stub cost model with fixed per-batch
 latency.  Covers the executor contracts: bounded in-flight depth, in-order
 per-request completion, SLO rejection under backlog, graceful shutdown with
 in-flight batches, the flush drain-intent bypass of the coalescing window,
-and the request-level (not batch-level) latency accounting fix.
+the request-level (not batch-level) latency accounting fix, cross-model
+round co-scheduling, and calibration-drift invalidation.
 """
 import threading
 import time
@@ -15,8 +16,9 @@ import numpy as np
 import pytest
 
 from repro.serving.vision import (BucketPlan, LatencyCalibrator,
-                                  ModelRegistry, ServeMetrics,
-                                  SystolicCostModel, VisionServeEngine)
+                                  ModelRegistry, RoundPart, RoundPlan,
+                                  ServeMetrics, SystolicCostModel,
+                                  VisionServeEngine)
 from repro.vision import zoo
 
 
@@ -64,7 +66,7 @@ class StubRegistry:
     def prewarm(self, key, buckets, **kw):
         pass
 
-    def apply(self, key, images):
+    def apply(self, key, images, devices=None):
         with self._lock:
             self.applied.append((key, images.shape))
         if self.gate is not None:
@@ -94,7 +96,8 @@ class StubCostModel:
         bmax = max(buckets)
         return -(-queued // bmax) * self.ms
 
-    def admit(self, model, slo_ms, queued, buckets, backlog_ms=0.0):
+    def admit(self, model, slo_ms, queued, buckets, backlog_ms=0.0,
+              group_size=None):
         predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
         if slo_ms is None:
             return True, predicted
@@ -252,7 +255,7 @@ def test_calibrator_least_squares_and_residuals():
     resid = cal.observe("m", 1, 2.0, 14.0)    # now residuals are reported
     assert resid == pytest.approx(4.0)
     snap = cal.snapshot()
-    assert snap["m"]["buckets"][1]["calibrated"]
+    assert snap["m"]["buckets"]["1"]["calibrated"]
     assert snap["m"]["pooled"]["n"] == 4
 
 
@@ -397,6 +400,172 @@ def test_flush_bypasses_batch_window():
     assert len(reg.applied) == 1
     assert results[0].batch_fill == 3 and results[0].bucket == 4
     engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Cross-model rounds (fake clock + stub backend; no mesh needed — rounds
+# also run on a single device, co-dispatching every model's batch).
+# ---------------------------------------------------------------------------
+
+class StubRoundCostModel(StubCostModel):
+    """StubCostModel + the round-planner surface the round scheduler uses."""
+
+    n_devices = 1
+
+    def plan_round(self, models, buckets):
+        parts = [RoundPart(m.key, self.plan_bucket(m, d, buckets), 0)
+                 for m, d in models]
+        return RoundPlan(parts, 1, 1,
+                         sum(p.plan.predicted_ms for p in parts))
+
+    def drain_rounds_ms(self, models, buckets):
+        return sum(self.drain_ms(m, d, buckets) for m, d in models)
+
+
+def _round_engine(registry, *, buckets=(1, 2, 4), max_in_flight=2,
+                  batch_window_ms=0.0):
+    return VisionServeEngine(
+        registry, cost_model=StubRoundCostModel(), buckets=buckets,
+        clock=FakeClock(), max_in_flight=max_in_flight,
+        batch_window_ms=batch_window_ms, cross_model=True)
+
+
+def test_cross_model_round_coschedules_all_models():
+    """With a huge coalescing window, flush's drain intent releases one
+    round carrying BOTH models' batches — a single co-scheduled dispatch,
+    each request fanned back its own logits."""
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _round_engine(reg, batch_window_ms=60_000.0)
+    rids = [engine.submit(("a", "b")[i % 2], _img(i)) for i in range(4)]
+    results = engine.flush()
+    assert [r.rid for r in results] == rids
+    for i, r in enumerate(results):
+        assert r.status == "ok"
+        assert r.logits[0] == pytest.approx(float(i))    # own image's mean
+    # exactly one round: one bucket-2 batch per model, dispatched together
+    assert sorted(reg.applied) == [("a", (2, 8, 8, 3)), ("b", (2, 8, 8, 3))]
+    snap = engine.metrics.snapshot()
+    assert snap["rounds"] == 1
+    assert snap["cross_model_rounds"] == 1
+    assert snap["max_round_models"] == 2
+    engine.close()
+
+
+def test_round_counts_as_one_in_flight_unit():
+    gate = threading.Event()
+    reg = StubRegistry(keys=("a", "b"), gate=gate)
+    engine = _round_engine(reg, max_in_flight=1)
+    for i in range(6):
+        engine.submit(("a", "b")[i % 2], _img(i))
+    assert _wait_until(lambda: len(reg.applied) >= 1)
+    time.sleep(0.1)
+    # the whole first round holds the single slot; nothing else dispatches
+    # beyond its own parts (max 2 models per round here)
+    assert len(reg.applied) <= 2
+    assert engine.metrics.max_in_flight <= 1
+    gate.set()
+    results = engine.flush()
+    assert [r.status for r in results] == ["ok"] * 6
+    engine.close()
+
+
+def test_round_part_error_does_not_sink_other_models():
+    class HalfExplodingRegistry(StubRegistry):
+        def apply(self, key, images, devices=None):
+            if key == "b":
+                raise RuntimeError("model b on fire")
+            return super().apply(key, images, devices)
+
+    reg = HalfExplodingRegistry(keys=("a", "b"))
+    engine = _round_engine(reg)
+    rid_a = engine.submit("a", _img(1))
+    rid_b = engine.submit("b", _img(2))
+    results = {r.rid: r for r in engine.flush()}
+    assert results[rid_a].status == "ok"
+    assert results[rid_b].status == "error"
+    assert "model b on fire" in results[rid_b].error
+    # the pipeline survives for later traffic
+    again = engine.submit("a", _img(3))
+    assert engine.future(again).result(timeout=30).status == "ok"
+    engine.close()
+
+
+def test_round_engine_drains_on_close():
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _round_engine(reg)
+    rids = [engine.submit(("a", "b")[i % 2], _img(i)) for i in range(5)]
+    engine.close()                        # drain=True default
+    for rid in rids:
+        assert engine.future(rid).result(timeout=1).status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Calibration drift: fingerprinted fits (backend / mesh change) — the
+# regression test for stale fits surviving a within-process change.
+# ---------------------------------------------------------------------------
+
+def test_calibrator_fingerprint_invalidates_stale_fits():
+    cal = LatencyCalibrator(min_samples=2)
+    for _ in range(2):
+        cal.observe("m", 1, 2.0, 20.0, fingerprint="xla|ndev=1")
+    assert cal.calibrated_ms("m", 1, 2.0,
+                             fingerprint="xla|ndev=1") == pytest.approx(20.0)
+    # backend changed within the process: the old scale (10x) must NOT be
+    # quoted for the new backend
+    assert cal.calibrated_ms("m", 1, 2.0, fingerprint="pallas|ndev=1") is None
+    # the stale fits were dropped, not just masked: the old fingerprint no
+    # longer sees them either
+    assert cal.calibrated_ms("m", 1, 2.0, fingerprint="xla|ndev=1") is None
+    # fits rebuilt under the new fingerprint converge independently
+    for _ in range(2):
+        cal.observe("m", 1, 2.0, 80.0, fingerprint="pallas|ndev=1")
+    assert cal.calibrated_ms("m", 1, 2.0,
+                             fingerprint="pallas|ndev=1") == pytest.approx(80.0)
+    assert cal.invalidations >= 1
+
+
+def test_mesh_shape_change_invalidates_via_cost_model():
+    """A cost model rebuilt for a different mesh width must not reuse the
+    single-device wall-ms scales (per-device microbatches differ)."""
+    reg = ModelRegistry(backend="xla")
+    model = reg.register(zoo.tiny_net(), "fuse_full")
+    cal = LatencyCalibrator(min_samples=2)
+    cm1 = SystolicCostModel(calibrator=cal, n_devices=1)
+    for _ in range(2):
+        cm1.observe(model, 1, cm1.predicted_ms(model, 1) * 50.0)
+    assert cm1.expected_ms(model, 1)[1] is True
+    # same process, new mesh shape -> new fingerprint -> fits dropped
+    cm2 = SystolicCostModel(calibrator=cal, n_devices=2)
+    ms, calibrated = cm2.expected_ms(model, 1)
+    assert calibrated is False
+    assert ms == pytest.approx(cm2.predicted_ms(model, 1))
+    # and the old cost model's fits are gone too (they were stale)
+    assert cm1.expected_ms(model, 1)[1] is False
+
+
+def test_calibrated_ms_cross_width_fallback_for_admission():
+    """Cross-model rounds execute a model on device groups (e.g. nd=4)
+    while full-mesh admission queries nd=8 cells that may never fill; the
+    calibrator must quote the model's pooled wall-ms scale from the width
+    it HAS observed rather than dropping admission back to accel-ms."""
+    cal = LatencyCalibrator(min_samples=2)
+    for _ in range(2):
+        cal.observe("m", 8, 1.0, 50.0, n_devices=4)     # group runs: 50x
+    # the exact (bucket, nd) cell and the nd=8 pool are both empty
+    assert cal.is_calibrated("m", 8, n_devices=8) is False
+    assert cal.calibrated_ms("m", 8, 2.0, n_devices=8) == pytest.approx(100.0)
+    # once the requested width has its own data, it wins over the fallback
+    for _ in range(2):
+        cal.observe("m", 8, 1.0, 80.0, n_devices=8)
+    assert cal.calibrated_ms("m", 8, 2.0, n_devices=8) == pytest.approx(160.0)
+
+
+def test_calibrator_fingerprint_does_not_churn_on_same_fp():
+    cal = LatencyCalibrator(min_samples=2)
+    for _ in range(3):
+        cal.observe("m", 1, 2.0, 20.0, fingerprint="xla|ndev=1")
+    assert cal.invalidations == 0
+    assert cal.snapshot()["m"]["buckets"]["1"]["n"] == 3
 
 
 # ---------------------------------------------------------------------------
