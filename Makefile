@@ -1,18 +1,23 @@
-# One-command checks for every PR.
+# One-command checks for every PR (run in CI by .github/workflows/ci.yml).
 #   make test        — tier-1 pytest suite (includes the slow conformance grids)
 #   make test-fast   — tier-1 minus tests marked `slow` (inner-loop runs)
 #   make bench-smoke — tiny vision-serve benchmark (sync vs async, plus
-#                      sharded cross-model rounds on 2 virtual devices —
-#                      one per container core; writes BENCH_serve.json)
+#                      sharded cross-model rounds — fifo and adaptive
+#                      round planners — on 2 virtual devices, one per
+#                      container core; writes BENCH_serve.json)
+#   make bench-check — compare the freshly written BENCH_serve.json
+#                      speedup ratios against the committed baseline
+#                      (ratios, not absolute us, so CI runners don't flake)
 #   make docs-check  — README/docs link + layout-table check, quickstart
 #                      commands in dry-run form
-#   make ci          — the full PR gate: test + bench-smoke + docs-check
+#   make ci          — the full PR gate: test + bench-smoke + bench-check
+#                      + docs-check
 #   make serve-demo  — end-to-end serving example on the Pallas backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke docs-check ci serve-demo
+.PHONY: test test-fast bench-smoke bench-check docs-check ci serve-demo
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,10 +30,13 @@ bench-smoke:
 	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
 	$(PY) -m benchmarks.run serve_sharded --json BENCH_serve.json
 
+bench-check:
+	$(PY) scripts/bench_check.py
+
 docs-check:
 	$(PY) scripts/docs_check.py
 
-ci: test bench-smoke docs-check
+ci: test bench-smoke bench-check docs-check
 
 serve-demo:
 	$(PY) examples/serve_vision.py

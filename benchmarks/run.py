@@ -8,7 +8,10 @@ writes machine-readable ``{suite: {name: us_per_call}}`` results, merging
 into an existing file suite-by-suite — so suites needing different process
 environments (e.g. ``serve_sharded`` under
 ``XLA_FLAGS=--xla_force_host_platform_device_count``) can accumulate into
-one trajectory file across invocations.
+one trajectory file across invocations.  A suite that ran this invocation
+replaces its dict wholesale, and suites no longer registered in ``SUITES``
+are dropped from the file — otherwise renamed/removed suites (and their
+stale entries) would survive in the trajectory forever.
 """
 import argparse
 import json
@@ -34,6 +37,20 @@ SUITES = {
 }
 
 
+def merge_results(existing: dict, fresh: dict, known_suites) -> dict:
+    """Merge one invocation's ``{suite: {name: us}}`` results into an
+    existing trajectory: suites run this invocation are replaced wholesale
+    (entries a suite no longer emits must not survive), untouched known
+    suites keep their previous numbers (cross-invocation accumulation),
+    and suites absent from ``known_suites`` are dropped entirely (renamed
+    or deleted suites used to linger in the file forever)."""
+    merged = {name: dict(table) for name, table in existing.items()
+              if name in known_suites}
+    for name, table in fresh.items():
+        merged[name] = dict(table)
+    return merged
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("suites", nargs="*", choices=[[], *SUITES],
@@ -48,11 +65,11 @@ def main(argv=None) -> None:
         common.start_suite(name)
         SUITES[name]()
     if args.json_path:
-        merged = {}
+        existing = {}
         if os.path.exists(args.json_path):
             with open(args.json_path) as f:
-                merged = json.load(f)
-        merged.update(common.results())
+                existing = json.load(f)
+        merged = merge_results(existing, common.results(), SUITES)
         with open(args.json_path, "w") as f:
             json.dump(merged, f, indent=2, sort_keys=True)
         print(f"wrote {args.json_path}")

@@ -13,10 +13,17 @@ isolates the executor.  The model is deliberately small (tiny_net at
 16px/w8): this suite measures serving-layer behavior, not kernel FLOPs —
 kernel-level numbers live in kernels_micro.py.
 
-``run_sharded`` is the multi-model workload: three tiny_net variants under
-a weighted open-loop stream, served once by the single-device sync
-baseline and once by the cross-model round scheduler over a data mesh of
-every visible device.  ``make bench-smoke`` exports
+``run_sharded`` is the multi-model skewed-traffic workload: three tiny_net
+variants under a weighted open-loop stream (the hot model dominates 4:2:1),
+served by the single-device sync baseline, by the cross-model round
+scheduler with the structural FIFO even split, and by the **adaptive**
+round planner that scores serial/even/uneven compositions in calibrated
+wall-ms per round.  Both sharded engines carry a latency calibrator fed by
+an unmeasured warm pass, so the adaptive planner's composition choices run
+on measured wall scales, not raw accel-ms (where sharding looks free).
+Acceptance: sharded >= sync and adaptive >= fifo in us/request;
+``scripts/bench_check.py`` guards both ratios against the committed
+baseline.  ``make bench-smoke`` exports
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — one virtual
 device per container core; more would oversubscribe the CPU and measure
 contention, not scheduling (correctness on 8 virtual devices is pinned by
@@ -109,7 +116,9 @@ def run(backend: str = "xla"):
 
 SHARDED_BUCKETS = (1, 2, 4, 8)
 SHARDED_REQUESTS = 24
-SHARDED_ITERS = 4
+SHARDED_ITERS = 6                    # multiple of the 3 modes: the rotated
+                                     # measurement order leads with each
+                                     # engine equally often
 MODEL_WEIGHTS = (4.0, 2.0, 1.0)      # hot model dominates, all keep traffic
 
 
@@ -121,15 +130,25 @@ def _register_zoo3(registry):
     return registry
 
 
-def _build_sharded_engine(backend: str, n_devices: int):
+WARM_STREAMS = 2                     # unmeasured passes feeding calibration
+
+
+def _build_sharded_engine(backend: str, n_devices: int,
+                          round_planner: str = "fifo"):
     from repro.launch.mesh import make_data_mesh
-    from repro.serving.vision import (ModelRegistry, SystolicCostModel,
-                                      VisionServeEngine)
+    from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
+                                      SystolicCostModel, VisionServeEngine)
 
     mesh = make_data_mesh(n_devices) if n_devices > 1 else None
     registry = _register_zoo3(ModelRegistry(backend=backend, mesh=mesh))
+    # every engine gets its own calibrator so round composition (and the
+    # fifo-vs-adaptive comparison) runs in measured wall-ms after the warm
+    # passes — in raw accel-ms sharding looks free and adaptivity would
+    # chase simulator artifacts
     engine = VisionServeEngine(
-        registry, cost_model=SystolicCostModel(n_devices=n_devices),
+        registry, cost_model=SystolicCostModel(
+            n_devices=n_devices, round_planner=round_planner,
+            calibrator=LatencyCalibrator(min_samples=2)),
         buckets=SHARDED_BUCKETS, pipelined=n_devices > 1,
         cross_model=n_devices > 1, max_in_flight=3,
         batch_window_ms=2.0 if n_devices > 1 else 0.0)
@@ -138,8 +157,9 @@ def _build_sharded_engine(backend: str, n_devices: int):
 
 
 def run_sharded(backend: str = "xla"):
-    """Multi-model open-loop stream: sharded cross-model rounds vs the
-    single-device sync baseline (acceptance: sharded >= sync)."""
+    """Multi-model skewed open-loop stream: sharded cross-model rounds
+    (fifo and adaptive composition) vs the single-device sync baseline
+    (acceptance: sharded >= sync, adaptive >= fifo)."""
     import jax
 
     from repro.serving.vision import make_mixed_burst, stream_items
@@ -150,20 +170,26 @@ def run_sharded(backend: str = "xla"):
           f"({INTERARRIVAL_MS:.0f}ms inter-arrival), backend={backend}, "
           f"{ndev} visible device(s)")
     engines = {"sync_1dev": _build_sharded_engine(backend, 1),
-               "sharded": _build_sharded_engine(backend, ndev)}
+               "sharded_fifo": _build_sharded_engine(backend, ndev, "fifo"),
+               "sharded": _build_sharded_engine(backend, ndev, "adaptive")}
     reg = engines["sharded"].registry
-    warm = make_mixed_burst(reg, SHARDED_REQUESTS, seed=100,
-                            weights=MODEL_WEIGHTS)
+    warms = [make_mixed_burst(reg, SHARDED_REQUESTS, seed=100 + i,
+                              weights=MODEL_WEIGHTS)
+             for i in range(WARM_STREAMS)]
     streams = [make_mixed_burst(reg, SHARDED_REQUESTS, seed=i,
                                 weights=MODEL_WEIGHTS)
                for i in range(SHARDED_ITERS)]
     secs = {m: 0.0 for m in engines}
     for mode in engines:
-        stream_items(engines[mode], warm,
-                     interarrival_ms=INTERARRIVAL_MS)
-        engines[mode].flush()                    # warm scheduling path
-    for items in streams:
-        for mode in engines:
+        for warm in warms:               # warm scheduling + calibration
+            stream_items(engines[mode], warm,
+                         interarrival_ms=INTERARRIVAL_MS)
+            engines[mode].flush()
+    modes = list(engines)
+    for si, items in enumerate(streams):
+        # rotate which engine measures first so slow machine drift and
+        # turn-order effects cancel across the iteration set
+        for mode in modes[si % len(modes):] + modes[:si % len(modes)]:
             t0 = time.perf_counter()
             stream_items(engines[mode], items,
                          interarrival_ms=INTERARRIVAL_MS)
@@ -176,19 +202,27 @@ def run_sharded(backend: str = "xla"):
         m = engine.metrics.snapshot()
         ips = (SHARDED_ITERS * SHARDED_REQUESTS / secs[mode]
                if secs[mode] else 0.0)
+        strategies = ",".join(f"{k}:{v}" for k, v in
+                              sorted(m["round_strategies"].items())) or "-"
         emit(f"serve_sharded.stream{SHARDED_REQUESTS}.{mode}.{backend}",
              f"{us[mode]:.0f}",
              f"ips={ips:.0f} batches={m['batches']} rounds={m['rounds']} "
              f"cross_model_rounds={m['cross_model_rounds']} "
              f"max_round_models={m['max_round_models']} "
-             f"groups={m['max_round_groups']}")
+             f"groups={m['max_round_groups']} strategies={strategies}")
     speedup = us["sync_1dev"] / us["sharded"] if us["sharded"] else 0.0
     emit(f"serve_sharded.speedup.{backend}", "-",
          f"sharded/sync throughput ratio = {speedup:.2f}x on {ndev} "
          f"device(s) (sync {us['sync_1dev']:.0f}us/req, "
          f"sharded {us['sharded']:.0f}us/req)")
-    engines["sharded"].close()
-    engines["sync_1dev"].close()
+    adaptive_gain = (us["sharded_fifo"] / us["sharded"]
+                     if us["sharded"] else 0.0)
+    emit(f"serve_sharded.adaptive_vs_fifo.{backend}", "-",
+         f"adaptive/fifo round-planner throughput ratio = "
+         f"{adaptive_gain:.2f}x (fifo {us['sharded_fifo']:.0f}us/req, "
+         f"adaptive {us['sharded']:.0f}us/req)")
+    for engine in engines.values():
+        engine.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""Benchmark regression gate for `make ci`: guard speedup RATIOS, not
+absolute microseconds.
+
+Compares the freshly written ``BENCH_serve.json`` (produced by `make
+bench-smoke`) against the committed baseline (``git show
+HEAD:BENCH_serve.json`` by default) on the serving suites' headline
+ratios:
+
+* ``serve``          — async/sync speedup (``sync us / async us``)
+* ``serve_sharded``  — sharded/sync speedup and adaptive/fifo round-planner
+                       gain
+
+Absolute us/request depends on the runner (container cores, CPU
+contention, thermal state) and would flake in CI; the *ratio* between two
+engines measured interleaved on the same machine in the same process is
+what the serving stack actually promises.  A ratio may regress by at most
+``--tolerance`` (fraction, default 0.30) relative to the committed
+baseline, and must in any case stay above ``floor * (1 - tolerance)``
+(floor 1.0: the async executor, the sharded round scheduler, and the
+adaptive planner must not be slower than what they replace by more than
+measurement noise allows).
+
+Exit code 0 = all guarded ratios hold (or nothing to compare: suite not
+run, or no committed baseline yet); 1 = a ratio regressed.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_FILE = "BENCH_serve.json"
+
+# (label, suite, numerator key, denominator key, floor, track_baseline)
+# ratio = numerator us / denominator us  ->  ">= 1" means the denominator
+# engine is at least as fast as the numerator engine.  track_baseline=False
+# guards the absolute floor only: adaptive-vs-fifo parity is the expected
+# steady state on small shared-core meshes (the even split IS the right
+# answer there), so ratcheting against a lucky baseline sample would turn
+# measurement noise into CI flakes.
+RATIOS = [
+    ("async_speedup", "serve",
+     "serve.stream16.sync.xla", "serve.stream16.async.xla", 1.0, True),
+    ("sharded_speedup", "serve_sharded",
+     "serve_sharded.stream24.sync_1dev.xla",
+     "serve_sharded.stream24.sharded.xla", 1.0, True),
+    ("adaptive_vs_fifo", "serve_sharded",
+     "serve_sharded.stream24.sharded_fifo.xla",
+     "serve_sharded.stream24.sharded.xla", 1.0, False),
+]
+
+
+def ratio_of(results, suite, num_key, den_key):
+    """The ratio for one spec, or None when the suite/keys/values cannot
+    produce one (suite not run, key renamed, zero denominator)."""
+    table = results.get(suite)
+    if not isinstance(table, dict):
+        return None
+    num, den = table.get(num_key), table.get(den_key)
+    if not isinstance(num, (int, float)) or not isinstance(den, (int, float)):
+        return None
+    if den <= 0:
+        return None
+    return num / den
+
+
+def compare(current, baseline, tolerance):
+    """Returns (errors, report_lines).  ``baseline`` may be None (no
+    committed file yet): only the absolute floors apply."""
+    errors, report = [], []
+    for label, suite, num_key, den_key, floor, track_baseline in RATIOS:
+        cur = ratio_of(current, suite, num_key, den_key)
+        if cur is None:
+            if suite in current:
+                errors.append(
+                    f"{label}: suite {suite!r} ran but is missing "
+                    f"{num_key!r}/{den_key!r} — benchmark output drifted "
+                    f"from the guard spec")
+            else:
+                report.append(f"{label}: suite {suite!r} not in current "
+                              f"results, skipped")
+            continue
+        base = (ratio_of(baseline, suite, num_key, den_key)
+                if baseline and track_baseline else None)
+        bound = floor * (1.0 - tolerance)
+        if base is not None:
+            bound = max(bound, base * (1.0 - tolerance))
+        line = (f"{label}: current {cur:.3f}x, baseline "
+                f"{'-' if base is None else f'{base:.3f}x'}, "
+                f"must be >= {bound:.3f}x")
+        report.append(line)
+        if cur < bound:
+            errors.append(f"{label} regressed: {line}")
+    return errors, report
+
+
+def load_baseline(spec):
+    """Baseline results from a path, or from ``git show HEAD:<file>`` for
+    the default ``git:`` spec; None when unavailable (first commit of the
+    file, detached tooling, etc.)."""
+    if spec.startswith("git:"):
+        rel = spec[len("git:"):]
+        proc = subprocess.run(["git", "show", f"HEAD:{rel}"], cwd=ROOT,
+                              capture_output=True, text=True)
+        if proc.returncode != 0:
+            return None
+        try:
+            return json.loads(proc.stdout)
+        except json.JSONDecodeError:
+            return None
+    if not os.path.exists(spec):
+        return None
+    with open(spec) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=os.path.join(ROOT, BENCH_FILE),
+                    help="freshly written benchmark JSON (default: the "
+                         "working-tree BENCH_serve.json)")
+    ap.add_argument("--baseline", default=f"git:{BENCH_FILE}",
+                    help="committed baseline: a path, or git:<repo-rel-"
+                         "path> for `git show HEAD:<path>` (default)")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", 0.30)),
+                    help="allowed fractional ratio regression (CI runners "
+                         "are noisy; ratios, not us, absorb most of it)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"bench-check: SKIP ({args.current} not found — run "
+              f"`make bench-smoke` first)")
+        return 0
+    with open(args.current) as f:
+        current = json.load(f)
+    baseline = load_baseline(args.baseline)
+    if baseline is None:
+        print(f"bench-check: no committed baseline ({args.baseline}); "
+              f"checking absolute floors only")
+    errors, report = compare(current, baseline, args.tolerance)
+    for line in report:
+        print(f"  {line}")
+    if errors:
+        print("bench-check: FAILED")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"bench-check: OK ({len(report)} ratio(s) within "
+          f"{args.tolerance:.0%} tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

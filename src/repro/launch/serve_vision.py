@@ -20,7 +20,10 @@ each dispatch co-schedules one bucketed batch per model onto device groups
 of the mesh, and batches shard over their group's ``"data"`` axis.
 ``--warm-bursts`` replays the burst before the measured pass so the latency
 calibrator has enough observations for SLO admission to operate in
-calibrated wall-ms.
+calibrated wall-ms.  ``--round-planner`` picks the round composition
+strategy (adaptive scoring vs the structural FIFO even split) and
+``--admission-quantile`` the latency quantile SLO admission reasons at
+(default p95; 0.5 reproduces the historical mean-based admit).
 """
 from __future__ import annotations
 
@@ -60,6 +63,17 @@ def main(argv=None):
                     help="per-request SLO for admission control (calibrated"
                          " wall-ms once the calibrator converges,"
                          " accelerator-ms before)")
+    ap.add_argument("--admission-quantile", type=float, default=0.95,
+                    help="latency quantile SLO admission prices batches at"
+                         " (scale*accel + z*resid_std from the calibrator's"
+                         " residual variance); 0.5 = the historical"
+                         " mean-based admit")
+    ap.add_argument("--round-planner", default="adaptive",
+                    choices=["fifo", "adaptive"],
+                    help="cross-model round composition: 'adaptive' scores"
+                         " serial/even/uneven splits in calibrated wall-ms"
+                         " and picks the cheapest; 'fifo' always deals"
+                         " models onto the structural even split")
     ap.add_argument("--sync", action="store_true",
                     help="drain synchronously on the caller's thread instead"
                          " of the pipelined executor")
@@ -105,10 +119,14 @@ def main(argv=None):
         net = build_network(name, args.resolution)
         registry.register(net, variant, key=entry)
 
+    if not 0.0 < args.admission_quantile < 1.0:
+        raise SystemExit("--admission-quantile must be in (0, 1)")
     calibrator = LatencyCalibrator(min_samples=args.min_calibration_samples)
     engine = VisionServeEngine(
-        registry, cost_model=SystolicCostModel(calibrator=calibrator,
-                                               n_devices=args.mesh or 1),
+        registry, cost_model=SystolicCostModel(
+            calibrator=calibrator, n_devices=args.mesh or 1,
+            round_planner=args.round_planner,
+            admission_quantile=args.admission_quantile),
         buckets=args.buckets, pipelined=not args.sync,
         max_in_flight=args.max_in_flight)
     engine.warmup()
@@ -134,6 +152,8 @@ def main(argv=None):
     snap["calibration"] = calibrator.snapshot()
     snap["mode"] = "sync" if args.sync else "pipelined"
     snap["mesh_devices"] = args.mesh or 1
+    snap["round_planner"] = args.round_planner
+    snap["admission_quantile"] = args.admission_quantile
     print(json.dumps(snap, indent=2, sort_keys=True))
     if args.json_path:
         with open(args.json_path, "w") as f:

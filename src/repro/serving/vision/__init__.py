@@ -16,14 +16,17 @@ See docs/serving_vision.md for the architecture sketch.
 from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
                                           fit_image, form_batch, form_round)
-from repro.serving.vision.calibrate import LatencyCalibrator
+from repro.serving.vision.calibrate import LatencyCalibrator, z_score
 from repro.serving.vision.costmodel import (BucketPlan, RoundPart, RoundPlan,
-                                            SystolicCostModel, round_groups)
+                                            SystolicCostModel,
+                                            power_of_two_partitions,
+                                            round_groups, uneven_sizes)
 from repro.serving.vision.engine import (VisionFuture, VisionResult,
                                          VisionServeEngine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
-                                           default_model_key, device_groups)
+                                           default_model_key, device_groups,
+                                           device_groups_sized)
 from repro.serving.vision.traffic import (make_mixed_burst, stream_items,
                                           stream_mixed_burst,
                                           submit_mixed_burst)
@@ -33,7 +36,8 @@ __all__ = [
     "LatencyStat", "ModelRegistry", "RegisteredModel", "RequestQueue",
     "RoundPart", "RoundPlan", "ServeMetrics", "SystolicCostModel",
     "VisionFuture", "VisionRequest", "VisionResult", "VisionServeEngine",
-    "default_model_key", "device_groups", "fit_image", "form_batch",
-    "form_round", "make_mixed_burst", "percentile", "round_groups",
-    "stream_items", "stream_mixed_burst", "submit_mixed_burst",
+    "default_model_key", "device_groups", "device_groups_sized",
+    "fit_image", "form_batch", "form_round", "make_mixed_burst",
+    "percentile", "power_of_two_partitions", "round_groups", "stream_items",
+    "stream_mixed_burst", "submit_mixed_burst", "uneven_sizes", "z_score",
 ]

@@ -17,6 +17,15 @@ storage)::
 
     s = sum(accel * wall) / sum(accel^2)
 
+Tail awareness: every fit also tracks ``sum(wall^2)``, from which the
+residual variance of the through-origin fit falls out analytically
+(``SSE = sum_yy - sum_xy^2 / sum_xx``).  ``calibrated_ms(..., quantile=q)``
+quotes ``scale * accel + z_q * resid_std`` — a Gaussian latency quantile —
+so SLO admission can reason about the tail instead of the mean (the paper's
+pitch is tail latency and utilization on systolic arrays, and a mean-based
+admission happily admits requests the p95 will blow).  ``quantile=None``
+(or 0.5) keeps the mean estimate.
+
 The accelerator prediction for one cell is a constant, so the
 through-origin fit degenerates gracefully to the ratio-of-means estimator —
 exactly the right thing — while staying well-defined when the predictor
@@ -24,7 +33,12 @@ varies (e.g. after a simulator-config change mid-process).  A pooled
 per-(model, n_devices) fit over all of that model's observations backs up
 buckets that have not individually converged yet, so bucket selection never
 compares calibrated wall-ms for one bucket against raw accelerator-ms for
-another.  ``n_devices`` is part of the key because a batch sharded over a
+another.  One level further out, a **global** ratio pooled over every
+calibrated model (same fingerprint) backs up models with no observations at
+all: the simulator already prices models *relative to each other*, so one
+machine-wide accel->wall scale pins the units for the whole fleet.  This
+closes the warm-up window where a cross-model admission backlog used to mix
+wall-ms and accel-ms until every model had served ``min_samples`` batches.  ``n_devices`` is part of the key because a batch sharded over a
 device group has a different accel->wall scale than the same bucket on one
 device (per-device microbatches, collective/dispatch overheads).
 
@@ -42,22 +56,34 @@ guarded by one lock.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
-from typing import Dict, Optional, Tuple
+from statistics import NormalDist
+from typing import Dict, List, Optional, Tuple
+
+
+def z_score(quantile: float) -> float:
+    """Standard-normal z for a latency quantile in (0, 1); 0.5 -> 0 (mean)."""
+    assert 0.0 < quantile < 1.0, quantile
+    return NormalDist().inv_cdf(quantile)
 
 
 @dataclasses.dataclass
 class _Fit:
-    """Running through-origin least-squares accumulator."""
+    """Running through-origin least-squares accumulator with residual
+    variance (``sum_yy`` makes ``SSE = sum_yy - sum_xy^2 / sum_xx`` exact
+    without storing samples)."""
     n: int = 0
     sum_xy: float = 0.0
     sum_xx: float = 0.0
+    sum_yy: float = 0.0
     sum_abs_resid: float = 0.0     # |measured - fit-at-observation-time|
 
     def add(self, x: float, y: float) -> None:
         self.n += 1
         self.sum_xy += x * y
         self.sum_xx += x * x
+        self.sum_yy += y * y
 
     @property
     def scale(self) -> Optional[float]:
@@ -65,10 +91,48 @@ class _Fit:
             return None
         return self.sum_xy / self.sum_xx
 
+    @property
+    def resid_var(self) -> float:
+        """Unbiased residual variance of the through-origin fit (ms^2);
+        0 until two observations exist (one point fits exactly)."""
+        if self.n < 2 or self.sum_xx <= 0.0:
+            return 0.0
+        sse = self.sum_yy - self.sum_xy * self.sum_xy / self.sum_xx
+        return max(0.0, sse / (self.n - 1))
+
+    @property
+    def resid_std(self) -> float:
+        return math.sqrt(self.resid_var)
+
+    def quote(self, accel_ms: float,
+              quantile: Optional[float] = None) -> Optional[float]:
+        """Wall-ms estimate at ``quantile`` (None -> mean fit)."""
+        scale = self.scale
+        if scale is None:
+            return None
+        ms = scale * accel_ms
+        if quantile is not None:
+            ms += z_score(quantile) * self.resid_std
+        return ms
+
     def summary(self) -> Dict[str, float]:
         return {"n": self.n, "scale": self.scale if self.scale else 0.0,
+                "resid_var_ms2": self.resid_var,
+                "resid_std_ms": self.resid_std,
                 "mean_abs_resid_ms": (self.sum_abs_resid / self.n
                                       if self.n else 0.0)}
+
+
+def _combined(fits: List[_Fit]) -> _Fit:
+    """Pool several through-origin fits into one (sums are sufficient
+    statistics, so pooling is exact for the combined sample)."""
+    tot = _Fit()
+    for f in fits:
+        tot.n += f.n
+        tot.sum_xy += f.sum_xy
+        tot.sum_xx += f.sum_xx
+        tot.sum_yy += f.sum_yy
+    return tot
 
 
 class LatencyCalibrator:
@@ -162,51 +226,93 @@ class LatencyCalibrator:
 
     def calibrated_ms(self, key: str, bucket: int, accel_ms: float,
                       n_devices: int = 1,
-                      fingerprint: Optional[str] = None) -> Optional[float]:
+                      fingerprint: Optional[str] = None,
+                      quantile: Optional[float] = None) -> Optional[float]:
         """Calibrated wall-ms for an accelerator prediction, or None.
 
         Resolution order: the (model, bucket, n_devices) cell once it has
         ``min_samples`` observations, else the pooled per-(model,
         n_devices) fit once *it* has ``min_samples`` (keeps every bucket of
         a model in the same units as soon as any bucket has data), else the
-        model's best-sampled pooled fit at ANY mesh width, else None
-        (caller falls back to raw accelerator-ms).
+        model's best-sampled pooled fit at ANY mesh width, else the
+        **global** cross-model ratio (every same-fingerprint model's
+        observations pooled — the simulator's relative pricing plus one
+        machine scale), else None (caller falls back to raw accel-ms).
 
         The cross-width fallback matters for SLO admission under sharding:
         admission prices a model's drain on the full mesh, but cross-model
         rounds execute it on smaller groups, so the full-mesh cells may
-        never accumulate samples.  A scale borrowed from another width is
-        approximate (per-width dispatch overheads differ) but keeps the
-        whole admission sum in wall-ms — raw accel-ms would be orders of
-        magnitude off and silently over-admit.  A mismatching
-        ``fingerprint`` drops the stale fits and returns None."""
+        never accumulate samples.  A scale borrowed from another width or
+        model is approximate (per-width dispatch overheads and per-model
+        fit quality differ) but keeps the whole admission sum in wall-ms —
+        raw accel-ms would be orders of magnitude off and silently
+        over-admit.  A mismatching ``fingerprint`` drops the stale fits.
+
+        ``quantile`` (e.g. 0.95) adds ``z * resid_std`` of whichever fit
+        answered, turning the mean estimate into a Gaussian tail quantile
+        for tail-aware SLO admission; None keeps the mean."""
         with self._lock:
             if not self._check_fingerprint_locked(key, fingerprint):
                 return None
-            cell = self._cells.get((key, bucket, n_devices))
-            if cell is not None and cell.n >= self.min_samples:
-                scale = cell.scale
-                if scale is not None:
-                    return scale * accel_ms
-            pooled = self._pooled.get((key, n_devices))
-            if pooled is not None and pooled.n >= self.min_samples:
-                scale = pooled.scale
-                if scale is not None:
-                    return scale * accel_ms
-            others = [f for (k, nd), f in self._pooled.items()
-                      if k == key and f.n >= self.min_samples
-                      and f.scale is not None]
-            if others:
-                return max(others, key=lambda f: f.n).scale * accel_ms
+            fit = self._resolve_fit_locked(key, bucket, n_devices,
+                                           fingerprint)
+            if fit is None:
+                return None
+            return fit.quote(accel_ms, quantile)
+
+    def _resolve_fit_locked(self, key: str, bucket: int, n_devices: int,
+                            fingerprint: Optional[str]) -> Optional[_Fit]:
+        cell = self._cells.get((key, bucket, n_devices))
+        if cell is not None and cell.n >= self.min_samples \
+                and cell.scale is not None:
+            return cell
+        pooled = self._pooled.get((key, n_devices))
+        if pooled is not None and pooled.n >= self.min_samples \
+                and pooled.scale is not None:
+            return pooled
+        others = [f for (k, nd), f in self._pooled.items()
+                  if k == key and f.n >= self.min_samples
+                  and f.scale is not None]
+        if others:
+            return max(others, key=lambda f: f.n)
+        glob = self._global_fit_locked(fingerprint)
+        if glob.n >= self.min_samples and glob.scale is not None:
+            return glob
+        return None
+
+    def _global_fit_locked(self, fingerprint: Optional[str]) -> _Fit:
+        """Every pooled observation under ``fingerprint`` combined into one
+        cross-model fit (all of them when fingerprint is None).  Derived
+        from the surviving pooled fits on every query, so drift drops and
+        invalidations are reflected automatically."""
+        return _combined([
+            f for (k, nd), f in self._pooled.items()
+            if fingerprint is None or self._fps.get(k) in (None, fingerprint)
+        ])
+
+    def global_scale(self, fingerprint: Optional[str] = None
+                     ) -> Optional[float]:
+        """The machine-wide accel->wall ratio (None until ``min_samples``
+        observations exist across all same-fingerprint models)."""
+        with self._lock:
+            glob = self._global_fit_locked(fingerprint)
+            if glob.n >= self.min_samples:
+                return glob.scale
             return None
 
     def snapshot(self) -> Dict:
-        """{model: {"pooled": fit, "buckets": {label: fit}}} summaries.
+        """{model: {"pooled": fit, "buckets": {label: fit}}} summaries plus
+        a ``"global"`` cross-model fit.  Every fit summary carries the
+        residual variance/std alongside the scale, so a dumped metrics
+        snapshot is self-describing about how tight each calibration is.
         Bucket labels are strings: ``"<bucket>"`` for single-device cells,
         ``"<bucket>x<n_devices>"`` for sharded ones (and sharded pooled
         fits ``"pooled@x<n_devices>"``)."""
         with self._lock:
             out: Dict[str, Dict] = {}
+            glob = self._global_fit_locked(None)
+            if glob.n:
+                out["global"] = glob.summary()
             for (key, nd), fit in self._pooled.items():
                 entry = out.setdefault(key, {"pooled": {}, "buckets": {}})
                 if nd == 1:

@@ -20,10 +20,22 @@ uses it four ways:
     independent convolutions onto independent array rows, lifted to the
     fleet: independent models fill independent devices).  A batch sharded
     over ``g`` devices is priced as the per-device microbatch
-    (``bucket / g``), and the round costs the slowest device group;
+    (``bucket / g``), and the round costs the slowest device group.  The
+    **adaptive** planner (default) enumerates candidate compositions —
+    serializing every model on the full mesh, the structural even
+    power-of-two split, and uneven power-of-two splits sized proportional
+    to queue depth — scores each in calibrated wall-ms via ``expected_ms``,
+    and returns the argmin; the losing candidates' scores ride along on the
+    ``RoundPlan`` for metrics and debugging.  ``round_planner="fifo"``
+    keeps the structural even split unconditionally (the pre-adaptive
+    behavior, and the benchmark baseline);
   * admission control — a request with an SLO is rejected up front when the
     predicted time to drain the queue ahead of it (plus its own batch)
-    already exceeds the SLO;
+    already exceeds the SLO.  Admission prices each batch at a configurable
+    latency **quantile** (default p95: ``scale * accel + z * resid_std``
+    from the calibrator's residual variance) rather than the mean — an SLO
+    is a tail promise, and a mean-based admit over-admits exactly when
+    latency is noisy;
   * reporting — predicted vs measured latency per batch (the cost model's
     calibration error is itself a serving metric).
 
@@ -65,14 +77,23 @@ class RoundPart:
 
 @dataclasses.dataclass
 class RoundPlan:
-    """A cross-model device round: one bucketed batch per model, models
-    assigned round-robin (FIFO order) to equal contiguous device groups.
-    ``predicted_ms`` is the slowest group's serial sum — groups run in
-    parallel, models sharing a group run back-to-back."""
+    """A cross-model device round: one bucketed batch per model assigned to
+    a contiguous device group.  ``predicted_ms`` is the slowest group's
+    serial sum — groups run in parallel, models sharing a group run
+    back-to-back.  ``group_sizes`` (devices per group, in group order) is
+    set by ``SystolicCostModel.plan_round``; None means equal groups of
+    ``n_devices // n_groups`` (duck-typed planners that predate uneven
+    splits).  ``strategy`` names the composition that won and
+    ``candidates`` records every scored composition's predicted ms per
+    served request — the planner's reasoning is part of the plan, so
+    metrics and debugging can see what adaptivity rejected."""
     parts: List[RoundPart]
     n_devices: int               # mesh size the round was planned for
     n_groups: int
     predicted_ms: float
+    group_sizes: Optional[List[int]] = None
+    strategy: str = "even"
+    candidates: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def served(self) -> int:
@@ -90,16 +111,92 @@ def round_groups(n_models: int, n_devices: int) -> int:
     return k
 
 
+def power_of_two_partitions(n_devices: int,
+                            n_parts: int) -> List[List[int]]:
+    """Every descending list of ``n_parts`` power-of-two group sizes
+    summing exactly to ``n_devices`` — the complete layout space of the
+    adaptive planner's uneven splits (used by engine warm-up to precompile
+    each reachable device group)."""
+    out: List[List[int]] = []
+
+    def rec(remaining: int, parts_left: int, max_size: int,
+            acc: List[int]) -> None:
+        if parts_left == 0:
+            if remaining == 0:
+                out.append(list(acc))
+            return
+        p = 1
+        while p * 2 <= min(max_size, remaining):
+            p *= 2
+        while p >= 1:
+            if remaining - p >= parts_left - 1:
+                rec(remaining - p, parts_left - 1, p, acc + [p])
+            p //= 2
+
+    if n_parts >= 1:
+        rec(n_devices, n_parts, n_devices, [])
+    return out
+
+
+def uneven_sizes(weights: Sequence[float],
+                 n_devices: int) -> Optional[List[int]]:
+    """Power-of-two device-group sizes, one per model, proportional to
+    ``weights`` (queue depths) and summing exactly to ``n_devices``.
+
+    Greedy water-filling: every model starts with one device, then the
+    group with the highest weight-per-device repeatedly doubles while a
+    doubling still fits.  Sizes stay powers of two (doubling from 1), so
+    every group keeps the bucket-divisibility property sharding relies on.
+    Returns None when no exact fill exists (more models than devices, or
+    the remainder cannot be expressed by any legal doubling) — the caller
+    simply drops the uneven candidate."""
+    n = len(weights)
+    if n == 0 or n > n_devices:
+        return None
+    sizes = [1] * n
+    free = n_devices - n
+    while free > 0:
+        fits = [i for i in range(n) if sizes[i] <= free]
+        if not fits:
+            return None
+        i = max(fits, key=lambda j: (weights[j] / sizes[j], -j))
+        free -= sizes[i]
+        sizes[i] *= 2
+    return sizes
+
+
 class SystolicCostModel:
     def __init__(self, cfg: SystolicConfig = PAPER_CONFIG, *,
                  stos: bool = True, baseline_dataflow: str = "OS",
                  calibrator: Optional[LatencyCalibrator] = None,
-                 n_devices: int = 1):
+                 n_devices: int = 1,
+                 round_planner: str = "adaptive",
+                 admission_quantile: float = 0.95,
+                 switch_margin: float = 0.25):
+        assert round_planner in ("fifo", "adaptive"), round_planner
+        assert 0.0 < admission_quantile < 1.0, admission_quantile
+        assert switch_margin >= 0.0, switch_margin
         self.cfg = cfg
         self.stos = stos
         self.baseline_dataflow = baseline_dataflow
         self.calibrator = calibrator
         self.n_devices = max(1, int(n_devices))
+        # "adaptive": plan_round scores serial/even/uneven compositions and
+        # returns the argmin; "fifo": the structural even split always.
+        self.round_planner = round_planner
+        # latency quantile admit() prices batches at (0.5 = mean).  Only
+        # bites once the calibrator carries residual variance; accel-ms
+        # warm-up estimates have no variance term.
+        self.admission_quantile = admission_quantile
+        # hysteresis: a non-structural composition must beat the even
+        # split's score by this fraction before the planner switches.
+        # Calibration scales on small batches carry 10-30% residual noise
+        # (see _Fit.resid_std), and a serial/uneven round is scored from
+        # cells observed under different co-scheduling conditions — so a
+        # predicted win inside the margin is indistinguishable from noise,
+        # and chasing it trades the warm, predictable structural split for
+        # jitter.  Decisive wins (sharding or skew worth >=25%) switch.
+        self.switch_margin = switch_margin
         self._cache: Dict[Tuple[str, int], float] = {}
 
     # -- latency ------------------------------------------------------------
@@ -139,14 +236,20 @@ class SystolicCostModel:
         return self.predicted_ms(model, bucket // n_devices)
 
     def expected_ms(self, model: RegisteredModel, batch: int,
-                    n_devices: int = 1) -> Tuple[float, bool]:
+                    n_devices: int = 1,
+                    quantile: Optional[float] = None) -> Tuple[float, bool]:
         """(latency, calibrated?) — calibrated wall-ms once the calibrator
-        has enough observations for this cell, raw accelerator-ms before."""
+        has enough observations for this cell (or, during warm-up, the
+        cross-model global ratio — simulator-relative pricing keeps every
+        model in wall units as soon as ANY model is calibrated), raw
+        accelerator-ms before.  ``quantile`` prices the Gaussian latency
+        quantile instead of the mean (tail-aware admission); it only moves
+        the estimate once a fit with residual variance is answering."""
         accel = self.sharded_accel_ms(model, batch, n_devices)
         if self.calibrator is not None:
             wall = self.calibrator.calibrated_ms(
                 model.key, batch, accel, n_devices=n_devices,
-                fingerprint=self.fingerprint(model))
+                fingerprint=self.fingerprint(model), quantile=quantile)
             if wall is not None:
                 return wall, True
         return accel, False
@@ -165,19 +268,23 @@ class SystolicCostModel:
     # -- scheduling ---------------------------------------------------------
     def plan_bucket(self, model: RegisteredModel, queued: int,
                     buckets: Sequence[int],
-                    group_size: Optional[int] = None) -> BucketPlan:
+                    group_size: Optional[int] = None,
+                    quantile: Optional[float] = None) -> BucketPlan:
         """Best bucket for ``queued`` waiting requests of one model on a
         ``group_size``-device group (default: the full mesh).
 
         Maximizes delivered images per predicted ms; ties break toward the
         smaller bucket (less padded compute, lower batch latency).
+        ``quantile`` prices batches at a latency quantile instead of the
+        mean (admission paths); scheduling calls leave it None.
         """
         assert queued >= 1
         g = self.n_devices if group_size is None else group_size
         best: Optional[BucketPlan] = None
         for b in sorted(buckets):
             e = self.shard_width(b, g)
-            ms, cal = self.expected_ms(model, b, n_devices=e)
+            ms, cal = self.expected_ms(model, b, n_devices=e,
+                                       quantile=quantile)
             plan = BucketPlan(b, min(queued, b), ms, cal, n_devices=e)
             if best is None or plan.imgs_per_ms > best.imgs_per_ms * (1 + 1e-9):
                 best = plan
@@ -185,50 +292,144 @@ class SystolicCostModel:
         return best
 
     def plan_round(self, models: Sequence[Tuple[RegisteredModel, int]],
-                   buckets: Sequence[int]) -> RoundPlan:
+                   buckets: Sequence[int],
+                   quantile: Optional[float] = None) -> RoundPlan:
         """Compose one cross-model device round from ``models`` — FIFO-
         ordered (model, queued depth) pairs, every entry with depth >= 1.
 
-        The mesh splits into ``round_groups`` equal contiguous groups and
-        models are dealt to groups round-robin in FIFO order, so the oldest
-        models land on distinct groups and run concurrently; each model's
-        batch is planned for (and sharded over) its group.  The round's
-        predicted latency is the slowest group's serial sum."""
+        With ``round_planner="adaptive"`` (default) three composition
+        families are scored in the cost model's best available unit
+        (calibrated wall-ms once any model converged, accel-ms before) and
+        the cheapest wins:
+
+        * ``even`` — the structural split: ``round_groups`` equal
+          contiguous groups, models dealt round-robin in FIFO order (the
+          only composition the "fifo" planner ever emits);
+        * ``uneven`` — one power-of-two group per model, sized proportional
+          to queue depth (a hot model gets half the mesh while the long
+          tail shares the rest);
+        * ``serial`` — no split: every model's batch runs back-to-back on
+          the full mesh (wins when per-group microbatches are too small to
+          amortize dispatch, i.e. the split is *not* actually faster).
+
+        Candidates are compared on predicted **ms per served request**
+        (``predicted_ms / served``), not raw round latency — different
+        compositions pick different buckets and so serve different request
+        counts, and a tiny round that finishes quickly by serving almost
+        nothing must not beat a full round (same delivered-throughput
+        objective as ``plan_bucket``).  A non-structural candidate must
+        beat the even split's score by ``switch_margin`` before it wins —
+        the scores are calibrated estimates with noise, and the structural
+        split is the warm, predictable default; ties and marginal wins
+        keep it.  Every candidate's per-request score is recorded in
+        ``RoundPlan.candidates``."""
         assert models
-        k = round_groups(len(models), self.n_devices)
-        g = self.n_devices // k
+        strategies = [("even", self._even_assignment(len(models)))]
+        if self.round_planner == "adaptive":
+            uneven = self._uneven_assignment(models)
+            if uneven is not None:
+                strategies.append(("uneven", uneven))
+            if len(models) > 1 and self.n_devices >= 1 \
+                    and strategies[0][1][1] != [self.n_devices]:
+                strategies.append(
+                    ("serial", ([0] * len(models), [self.n_devices])))
+        best: Optional[RoundPlan] = None
+        best_score = 0.0
+        scores: Dict[str, float] = {}
+        for name, (group_of, sizes) in strategies:
+            plan = self._score_assignment(models, buckets, group_of, sizes,
+                                          name, quantile=quantile)
+            score = plan.predicted_ms / max(1, plan.served)
+            scores[name] = score
+            if best is None:
+                best, best_score = plan, score
+                continue
+            bar = best_score * ((1.0 - self.switch_margin)
+                                if best.strategy == "even" else 1.0)
+            if score < bar:
+                best, best_score = plan, score
+        assert best is not None
+        best.candidates = scores
+        return best
+
+    def _even_assignment(self, n_models: int
+                         ) -> Tuple[List[int], List[int]]:
+        """(model -> group index, group sizes) for the structural even
+        split: round_groups equal groups, models dealt round-robin."""
+        k = round_groups(n_models, self.n_devices)
+        return [i % k for i in range(n_models)], [self.n_devices // k] * k
+
+    def _uneven_assignment(self, models: Sequence[Tuple[RegisteredModel, int]]
+                           ) -> Optional[Tuple[List[int], List[int]]]:
+        """One group per model, power-of-two sizes proportional to queue
+        depth; None when no exact fill exists or it degenerates to the
+        even split (nothing new to score).
+
+        Groups are laid out largest-first on the device list, so the
+        physical layout depends only on the size multiset — the finitely
+        many descending power-of-two partitions of the mesh
+        (``power_of_two_partitions``) — and ``warmup`` can precompile
+        every group the planner will ever emit."""
+        if len(models) < 2:
+            return None
+        by_model = uneven_sizes([max(1, depth) for _, depth in models],
+                                self.n_devices)
+        if by_model is None:
+            return None
+        order = sorted(range(len(by_model)),
+                       key=lambda i: (-by_model[i], i))
+        sizes = [by_model[i] for i in order]
+        group_of = [0] * len(by_model)
+        for grp, i in enumerate(order):
+            group_of[i] = grp
+        _, even_sizes = self._even_assignment(len(models))
+        if sizes == even_sizes:
+            return None
+        return group_of, sizes
+
+    def _score_assignment(self, models: Sequence[Tuple[RegisteredModel, int]],
+                          buckets: Sequence[int], group_of: List[int],
+                          sizes: List[int], strategy: str,
+                          quantile: Optional[float] = None) -> RoundPlan:
+        """Price one composition: each model's batch planned for (and
+        sharded over) its group, round latency = slowest group's serial
+        sum."""
         parts: List[RoundPart] = []
-        group_ms = [0.0] * k
-        for i, (model, depth) in enumerate(models):
-            plan = self.plan_bucket(model, depth, buckets, group_size=g)
-            grp = i % k
+        group_ms = [0.0] * len(sizes)
+        for (model, depth), grp in zip(models, group_of):
+            plan = self.plan_bucket(model, depth, buckets,
+                                    group_size=sizes[grp], quantile=quantile)
             parts.append(RoundPart(model.key, plan, grp))
             group_ms[grp] += plan.predicted_ms
-        return RoundPlan(parts, self.n_devices, k, max(group_ms))
+        return RoundPlan(parts, self.n_devices, len(sizes), max(group_ms),
+                         group_sizes=list(sizes), strategy=strategy)
 
     def drain_ms(self, model: RegisteredModel, queued: int,
                  buckets: Sequence[int],
-                 group_size: Optional[int] = None) -> float:
+                 group_size: Optional[int] = None,
+                 quantile: Optional[float] = None) -> float:
         """Predicted time to serve ``queued`` requests with greedy batching
         on a ``group_size``-device group (default: the full mesh)."""
         total = 0.0
         remaining = queued
         while remaining > 0:
             plan = self.plan_bucket(model, remaining, buckets,
-                                    group_size=group_size)
+                                    group_size=group_size, quantile=quantile)
             total += plan.predicted_ms
             remaining -= plan.served
         return total
 
     def drain_rounds_ms(self, models: Sequence[Tuple[RegisteredModel, int]],
-                        buckets: Sequence[int]) -> float:
+                        buckets: Sequence[int],
+                        quantile: Optional[float] = None) -> float:
         """Predicted time for the round scheduler to drain a queue
         snapshot: rounds are composed exactly as ``plan_round`` would and
         their latencies summed until every model's depth reaches zero."""
         depths = [[model, depth] for model, depth in models if depth > 0]
         total = 0.0
         while depths:
-            plan = self.plan_round([(m, d) for m, d in depths], buckets)
+            plan = self.plan_round([(m, d) for m, d in depths], buckets,
+                                   quantile=quantile)
             total += plan.predicted_ms
             for entry, part in zip(depths, plan.parts):
                 entry[1] -= part.plan.served
@@ -239,12 +440,22 @@ class SystolicCostModel:
     def admit(self, model: RegisteredModel, slo_ms: Optional[float],
               queued: int, buckets: Sequence[int],
               backlog_ms: float = 0.0,
-              group_size: Optional[int] = None) -> Tuple[bool, float]:
+              group_size: Optional[int] = None,
+              quantile: Optional[float] = None) -> Tuple[bool, float]:
         """(admit?, predicted e2e ms) for a request arriving behind
         ``queued`` same-model requests and ``backlog_ms`` of predicted
         other-model/in-flight work the scheduler serves first.  Latencies
         are calibrated wall-ms once the calibrator has enough observations
         (accelerator-ms before).  No SLO -> always admitted.
+
+        ``quantile`` (default: the cost model's ``admission_quantile``,
+        p95) prices each batch of this model's drain at that Gaussian
+        latency quantile using the calibrator's residual variance — an SLO
+        is a promise about the tail, so admission must reason about the
+        tail.  Per-batch quantiles summed over a drain over-estimate the
+        drain's own quantile (quantiles are not additive); admission errs
+        conservative by construction.  Pass 0.5 for the historical
+        mean-based admit.
 
         ``group_size`` prices this model's own drain on the device group
         the round scheduler would currently assign it (the engine passes
@@ -254,13 +465,17 @@ class SystolicCostModel:
         The ``backlog_ms`` side errs the other way (round drains price
         group concurrency, in-flight work is charged serially).
 
-        Known limitation: while SOME models are calibrated and others are
-        not, the cross-model backlog sum mixes wall-ms and accel-ms, so
-        admission can under-count the uncalibrated models' share until
-        every model has served ``min_samples`` batches (warm-up traffic —
-        the launcher's ``--warm-bursts`` — closes this window)."""
+        Mixed-units warm-up: while SOME models are calibrated and others
+        are not, the calibrator's global cross-model ratio keeps the whole
+        sum in wall-ms (simulator-relative pricing times one machine
+        scale).  Only before ANY model has ``min_samples`` observations do
+        estimates remain raw accel-ms — warm traffic (the launcher's
+        ``--warm-bursts``) closes that window after one burst of any
+        single model."""
+        q = self.admission_quantile if quantile is None else quantile
         predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets,
-                                               group_size=group_size)
+                                               group_size=group_size,
+                                               quantile=q)
         if slo_ms is None:
             return True, predicted
         return predicted <= slo_ms, predicted

@@ -41,8 +41,10 @@ Request lifecycle:
   the systolic array to saturate it, the scheduler maps independent models'
   batches onto device groups of the mesh.  Each cycle it snapshots every
   model with queued work, asks the cost model for a ``RoundPlan`` (one
-  bucket per model, models dealt round-robin onto equal contiguous device
-  groups, round latency = slowest group), pops all models atomically
+  bucket per model; the adaptive planner scores even/uneven/serial group
+  compositions in calibrated wall-ms and the plan carries the chosen
+  ``strategy`` plus per-group sizes, round latency = slowest group), pops
+  all models atomically
   (``RequestQueue.pop_many``), and ships the round as ONE unit: the device
   thread dispatches every part (async dispatch — parts on different groups
   execute concurrently), the completer blocks on each part in turn and fans
@@ -84,7 +86,8 @@ from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
 from repro.serving.vision.calibrate import LatencyCalibrator
 from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
 from repro.serving.vision.metrics import ServeMetrics
-from repro.serving.vision.registry import ModelRegistry, device_groups
+from repro.serving.vision.registry import (ModelRegistry, device_groups,
+                                           device_groups_sized)
 
 
 @dataclasses.dataclass
@@ -286,16 +289,21 @@ class VisionServeEngine:
         request: every other model's queued drain plus all batches already
         in flight through the pipeline.  Under the round scheduler the
         other models' drain is priced as the rounds it would actually form
-        (concurrent device groups), not a serial per-model sum."""
+        (concurrent device groups), not a serial per-model sum.  The drain
+        is priced at the cost model's admission quantile when it has one,
+        so the whole admission sum reasons about the tail; in-flight work
+        stays at its scheduling-time (mean) estimate."""
         snap = self._queue.snapshot()
+        q = getattr(self.cost_model, "admission_quantile", None)
+        kw = {} if q is None else {"quantile": q}
         if self.cross_model and hasattr(self.cost_model, "drain_rounds_ms"):
             other = self.cost_model.drain_rounds_ms(
                 [(self.registry.get(m), depth) for m, depth, _ in snap
-                 if m != model_key], self.buckets)
+                 if m != model_key], self.buckets, **kw)
         else:
             other = sum(
                 self.cost_model.drain_ms(self.registry.get(m), depth,
-                                         self.buckets)
+                                         self.buckets, **kw)
                 for m, depth, _ in snap if m != model_key)
         with self._lock:
             return other + self._inflight_pred_ms
@@ -429,8 +437,14 @@ class VisionServeEngine:
             # resolved before any request is popped: a plan whose group
             # count can't partition the device list must fail HERE, where
             # containment below still owns every queued request
-            groups = (device_groups(self._devices, rplan.n_groups)
-                      if self._devices else [None] * rplan.n_groups)
+            sizes = getattr(rplan, "group_sizes", None)
+            if self._devices is None:
+                groups = [None] * rplan.n_groups
+            elif sizes is not None:
+                # adaptive plans carry explicit (possibly uneven) sizes
+                groups = device_groups_sized(self._devices, sizes)
+            else:
+                groups = device_groups(self._devices, rplan.n_groups)
         except Exception as exc:
             # planner failure: fail everything currently queued rather than
             # retrying the same exception forever (same invariant as the
@@ -467,7 +481,9 @@ class VisionServeEngine:
         if not parts:
             self._round_done(rplan.predicted_ms)
             return None
-        self.metrics.on_round(len(parts), rplan.n_groups)
+        self.metrics.on_round(len(parts), rplan.n_groups,
+                              strategy=getattr(rplan, "strategy", None),
+                              candidates=getattr(rplan, "candidates", None))
         return _Round(parts, rplan.predicted_ms, rplan.n_groups)
 
     def _round_done(self, predicted_ms: float) -> None:
@@ -532,6 +548,10 @@ class VisionServeEngine:
                 self._fail(p.batch.requests, p.plan, exc, in_flight=False)
         t_end = self._clock()
         self.metrics.on_stage("device", t_end - t_start)
+        # composition feedback: how far off was the chosen plan's round
+        # latency from what the mesh actually delivered?
+        self.metrics.on_round_complete(rnd.predicted_ms,
+                                       (t_end - t_start) * 1e3)
         self._round_done(rnd.predicted_ms)
         return t_end
 
@@ -658,16 +678,33 @@ class VisionServeEngine:
         groups: List[tuple] = []
         if self.cross_model and self._devices and len(self._devices) > 1 \
                 and hasattr(self.cost_model, "plan_round"):
-            from repro.serving.vision.costmodel import round_groups
+            from repro.serving.vision.costmodel import (
+                power_of_two_partitions, round_groups)
             # group assignment is by FIFO position, so over time a model
             # can land on ANY group of any reachable partition width —
             # warm them all, or the first round on a fresh group compiles
             # under traffic
+            seen = set()
             widths = {round_groups(m, len(self._devices))
                       for m in range(1, len(ks) + 1)}
             for k_groups in sorted(widths):
                 if k_groups > 1:        # full mesh is warmed by default
-                    groups.extend(device_groups(self._devices, k_groups))
+                    for grp in device_groups(self._devices, k_groups):
+                        if grp not in seen:
+                            seen.add(grp)
+                            groups.append(grp)
+            if getattr(self.cost_model, "round_planner", None) == "adaptive":
+                # uneven splits are laid out largest-group-first, so the
+                # reachable layouts are exactly the descending power-of-two
+                # partitions of the mesh into 2..|models| groups
+                for m in range(2, len(ks) + 1):
+                    for sizes in power_of_two_partitions(
+                            len(self._devices), m):
+                        for grp in device_groups_sized(self._devices, sizes):
+                            if len(grp) < len(self._devices) \
+                                    and grp not in seen:
+                                seen.add(grp)
+                                groups.append(grp)
         for k in ks:
             model = self.registry.get(k)
             for b in bks:

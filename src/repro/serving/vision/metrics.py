@@ -118,6 +118,14 @@ class ServeMetrics:
         self.cross_model_rounds = 0    # rounds carrying >1 model
         self.max_round_models = 0      # widest round (models co-scheduled)
         self.max_round_groups = 0      # widest round (device groups used)
+        # adaptive round planner: which composition won, and by how much.
+        # round_margin is SIGNED, in predicted ms per served request (the
+        # planner's score unit): best alternative minus chosen — positive
+        # when the winner was decisively cheaper, negative when the switch
+        # hysteresis kept the structural split despite a cheaper challenger
+        self.round_strategies: Dict[str, int] = {}   # strategy -> rounds won
+        self.round_margin = LatencyStat()
+        self.round_pred_err = LatencyStat()  # |predicted - measured| per round
 
     def reset(self) -> None:
         """Zero every counter/distribution (e.g. after warm-up traffic so a
@@ -168,15 +176,39 @@ class ServeMetrics:
             if run_ms is not None:
                 self._stat(self.run, model).record(run_ms)
 
-    def on_round(self, n_models: int, n_groups: int) -> None:
+    def on_round(self, n_models: int, n_groups: int, *,
+                 strategy: Optional[str] = None,
+                 candidates: Optional[Dict[str, float]] = None) -> None:
         """One cross-model round dispatched: ``n_models`` batches
-        co-scheduled over ``n_groups`` device groups."""
+        co-scheduled over ``n_groups`` device groups.  ``strategy`` is the
+        composition the planner chose; ``candidates`` maps every scored
+        composition to its predicted ms per served request.  The recorded
+        margin (best alternative minus chosen) is signed: positive = the
+        chosen composition was predicted cheaper by that much per request,
+        negative = the switch hysteresis kept the structural split despite
+        a challenger predicted cheaper by that much."""
         with self._lock:
             self.rounds += 1
             if n_models > 1:
                 self.cross_model_rounds += 1
             self.max_round_models = max(self.max_round_models, n_models)
             self.max_round_groups = max(self.max_round_groups, n_groups)
+            if strategy is not None:
+                self.round_strategies[strategy] = \
+                    self.round_strategies.get(strategy, 0) + 1
+                if candidates and len(candidates) > 1:
+                    losers = [ms for name, ms in candidates.items()
+                              if name != strategy]
+                    self.round_margin.record(
+                        min(losers) - candidates[strategy])
+
+    def on_round_complete(self, predicted_ms: float,
+                          measured_ms: float) -> None:
+        """One round finished on the mesh: record how far the chosen
+        composition's predicted latency was from the measured wall time
+        (the adaptive planner's own calibration error)."""
+        with self._lock:
+            self.round_pred_err.record(abs(predicted_ms - measured_ms))
 
     # -- pipeline occupancy ---------------------------------------------------
     def on_inflight(self, delta: int) -> None:
@@ -229,6 +261,9 @@ class ServeMetrics:
                 "cross_model_rounds": self.cross_model_rounds,
                 "max_round_models": self.max_round_models,
                 "max_round_groups": self.max_round_groups,
+                "round_strategies": dict(self.round_strategies),
+                "round_margin_ms_per_req": self.round_margin.summary(),
+                "round_pred_abs_err_ms": self.round_pred_err.summary(),
                 "max_in_flight": self.max_in_flight,
                 "host_busy_s": self.host_busy_s,
                 "device_busy_s": self.device_busy_s,

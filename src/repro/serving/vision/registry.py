@@ -71,6 +71,21 @@ def device_groups(devices: Sequence, k: int) -> List[tuple]:
     return [tuple(devices[i * g:(i + 1) * g]) for i in range(k)]
 
 
+def device_groups_sized(devices: Sequence,
+                        sizes: Sequence[int]) -> List[tuple]:
+    """Split ``devices`` into contiguous groups with explicit per-group
+    sizes (the adaptive round planner's uneven splits); ``sizes`` must be
+    positive and sum to the device count."""
+    assert sum(sizes) == len(devices), (list(sizes), len(devices))
+    out: List[tuple] = []
+    i = 0
+    for s in sizes:
+        assert s >= 1, sizes
+        out.append(tuple(devices[i:i + s]))
+        i += s
+    return out
+
+
 class ModelRegistry:
     """Servable models + the (key, bucket[, device group]) -> jit cache."""
 

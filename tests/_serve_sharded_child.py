@@ -65,8 +65,13 @@ def main() -> None:
     ref.register(net, "depthwise")
     ref.register(net, "fuse_full")
     cal = LatencyCalibrator(min_samples=2)
+    # "fifo" pins the structural round shape (even split, round-robin) the
+    # assertions below rely on; the adaptive planner is exercised
+    # separately at the end (its composition choice is measurement-driven
+    # and deliberately not pinned)
     engine = VisionServeEngine(
-        reg, cost_model=SystolicCostModel(calibrator=cal, n_devices=8),
+        reg, cost_model=SystolicCostModel(calibrator=cal, n_devices=8,
+                                          round_planner="fifo"),
         buckets=(1, 2, 4, 8), max_in_flight=2)
     engine.warmup()
     items = make_mixed_burst(reg, 16, seed=7)
@@ -98,6 +103,34 @@ def main() -> None:
         {label for entry in cal.snapshot().values() if isinstance(entry, dict)
          for label in entry.get("buckets", {}) if "x" in str(label)})
     engine.close()
+
+    # -- adaptive round planner end-to-end on the same mesh ----------------
+    # composition choice is measurement-driven (calibrated wall-ms), so we
+    # assert the machinery — every request served, strategies recorded,
+    # per-request fan-back still bitwise — not which composition won
+    cal2 = LatencyCalibrator(min_samples=2)
+    adaptive = VisionServeEngine(
+        reg, cost_model=SystolicCostModel(calibrator=cal2, n_devices=8,
+                                          round_planner="adaptive"),
+        buckets=(1, 2, 4, 8), max_in_flight=2)
+    adaptive.warmup()
+    items2 = make_mixed_burst(reg, 16, seed=11)
+    rids2 = [adaptive.submit(k, img) for k, img in items2]
+    results2 = {r.rid: r for r in adaptive.flush()}
+    ok2 = all(results2[rid].status == "ok" for rid in rids2)
+    fanback2 = all(
+        np.array_equal(results2[rid].logits,
+                       np.asarray(ref.apply(k, fit_image(
+                           np.asarray(img, np.float32), 16)[None]))[0])
+        for rid, (k, img) in zip(rids2, items2))
+    snap2 = adaptive.metrics.snapshot()
+    out["adaptive_ok"] = bool(ok2)
+    out["adaptive_fanback_bitwise"] = bool(fanback2)
+    out["adaptive_rounds"] = snap2["rounds"]
+    out["adaptive_strategies"] = snap2["round_strategies"]
+    out["adaptive_strategy_rounds_match"] = (
+        sum(snap2["round_strategies"].values()) == snap2["rounds"])
+    adaptive.close()
     print(json.dumps(out))
 
 

@@ -4,14 +4,13 @@ import sys
 # Tests run on the single real CPU device (the 512-device override is
 # dryrun.py-only, per the brief).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, for `import benchmarks.*` under bare `pytest` invocations
+# (only `python -m pytest` puts the cwd on sys.path by itself)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 
 jax.config.update("jax_enable_x64", False)
 
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "slow: long-running conformance/regression grids (full zoo x backend "
-        "parity sweeps); deselect with -m 'not slow' / `make test-fast`")
+# The `slow` marker is registered in pyproject.toml ([tool.pytest.ini_options])
+# so plain `pytest` invocations from any directory see it too.

@@ -1,0 +1,365 @@
+"""Adaptive round planner + tail-aware calibrated admission.
+
+Deterministic unit tests: calibrator state is hand-built (exact wall-ms
+observations through the cost model), so composition scoring and
+variance-quantile admission are pinned without touching devices or real
+timing.  Also covers the CI tooling that guards the benchmarks:
+``scripts/bench_check.py`` ratio comparison and ``benchmarks.run``'s
+stale-suite merge fix.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
+                                  SystolicCostModel, device_groups_sized,
+                                  power_of_two_partitions, uneven_sizes,
+                                  z_score)
+from repro.vision import zoo
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BUCKETS = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Size machinery (pure functions).
+# ---------------------------------------------------------------------------
+
+def test_uneven_sizes_proportional_power_of_two():
+    assert uneven_sizes([8, 1, 1], 8) == [4, 2, 2]
+    assert uneven_sizes([1, 8, 1], 8) == [2, 4, 2]
+    assert uneven_sizes([1, 1], 8) == [4, 4]          # equal -> even split
+    assert uneven_sizes([3, 1, 1], 4) == [2, 1, 1]
+    assert uneven_sizes([1, 1, 1, 1], 2) is None      # more models than devs
+    assert all(s & (s - 1) == 0 for s in uneven_sizes([5, 2, 1], 16))
+    assert sum(uneven_sizes([5, 2, 1], 16)) == 16
+
+
+def test_power_of_two_partitions_complete():
+    assert power_of_two_partitions(8, 3) == [[4, 2, 2]]
+    assert power_of_two_partitions(8, 2) == [[4, 4]]
+    assert sorted(power_of_two_partitions(8, 4)) == [[2, 2, 2, 2],
+                                                     [4, 2, 1, 1]]
+    assert power_of_two_partitions(2, 3) == []        # no exact fill
+    for sizes in power_of_two_partitions(16, 5):
+        assert sum(sizes) == 16
+        assert sizes == sorted(sizes, reverse=True)
+
+
+def test_device_groups_sized_contiguous():
+    devs = list(range(8))
+    assert device_groups_sized(devs, [4, 2, 2]) == [
+        (0, 1, 2, 3), (4, 5), (6, 7)]
+    with pytest.raises(AssertionError):
+        device_groups_sized(devs, [4, 2])             # does not sum to 8
+
+
+# ---------------------------------------------------------------------------
+# Composition scoring with hand-built calibrator state.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def three_models():
+    reg = ModelRegistry(backend="xla")
+    net = zoo.tiny_net(resolution=16, width=8)
+    return [reg.register(net, v)
+            for v in ("depthwise", "fuse_half", "fuse_full")]
+
+
+def _calibrate_width(cm, model, scale, n_devices, buckets=BUCKETS):
+    """Feed exact wall = scale * accel observations for every bucket that
+    shards ``n_devices``-wide, so the (model, *, n_devices) cells are
+    converged with zero variance (n_devices=1 covers every bucket)."""
+    for b in buckets:
+        if n_devices > 1 and b % n_devices != 0:
+            continue
+        accel = cm.sharded_accel_ms(model, b, n_devices)
+        for _ in range(cm.calibrator.min_samples):
+            cm.observe(model, b, accel * scale, n_devices=n_devices)
+
+
+def test_adaptive_prefers_serial_when_split_is_slow(three_models):
+    """Hand-built scales where single-device execution is 100x the
+    full-mesh scale: serializing both models on the whole mesh must win,
+    and the loser's score must ride along on the plan."""
+    a, b = three_models[:2]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=2)
+    for m in (a, b):
+        _calibrate_width(cm, m, scale=100.0, n_devices=1)   # split groups
+        _calibrate_width(cm, m, scale=1.0, n_devices=2)     # full mesh
+    plan = cm.plan_round([(a, 8), (b, 8)], BUCKETS)
+    assert plan.strategy == "serial"
+    assert plan.n_groups == 1 and plan.group_sizes == [2]
+    assert [p.group for p in plan.parts] == [0, 0]
+    assert set(plan.candidates) == {"even", "serial"}
+    assert plan.candidates["serial"] < plan.candidates["even"]
+    # candidates record ms per served request; the winner's score is its own
+    assert plan.predicted_ms / plan.served == pytest.approx(
+        min(plan.candidates.values()))
+
+
+def test_adaptive_prefers_split_when_serial_is_slow(three_models):
+    """Scales flipped: sharding over the full mesh is 100x, per-device
+    groups cheap — the structural even split must win."""
+    a, b = three_models[:2]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=2)
+    for m in (a, b):
+        _calibrate_width(cm, m, scale=1.0, n_devices=1)
+        _calibrate_width(cm, m, scale=100.0, n_devices=2)
+    plan = cm.plan_round([(a, 8), (b, 8)], BUCKETS)
+    assert plan.strategy == "even"
+    assert plan.n_groups == 2 and plan.group_sizes == [1, 1]
+    assert plan.candidates["even"] < plan.candidates["serial"]
+
+
+def test_adaptive_uneven_split_follows_queue_skew():
+    """8-device mesh, a hot cheap model (depth 8) between two expensive
+    cold ones (depth 1): the even split deals both cold models onto ONE
+    group, serializing them, while the uneven split gives every model its
+    own group — the round sheds the cold-model serialization.  The hot
+    model, largest share, owns the wide group (largest-first layout)."""
+    reg = ModelRegistry(backend="xla")
+    net = zoo.tiny_net(resolution=16, width=8)
+    cold_a = reg.register(net, "depthwise", key="cold_a")
+    hot = reg.register(net, "fuse_full", key="hot")
+    cold_c = reg.register(net, "depthwise", key="cold_c")
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=8)
+    for m in (cold_a, hot, cold_c):
+        for nd in (1, 2, 4):
+            _calibrate_width(cm, m, scale=1.0, n_devices=nd)
+        _calibrate_width(cm, m, scale=1000.0, n_devices=8)   # serial loses
+    plan = cm.plan_round([(cold_a, 1), (hot, 8), (cold_c, 1)], BUCKETS)
+    assert plan.strategy == "uneven"
+    # groups laid out largest-first: the hot model owns the 4-wide group
+    assert plan.group_sizes == [4, 2, 2]
+    assert [p.group for p in plan.parts] == [1, 0, 2]
+    assert set(plan.candidates) == {"even", "uneven", "serial"}
+    assert plan.candidates["uneven"] < plan.candidates["even"]
+
+
+def test_switch_margin_keeps_structural_split(three_models):
+    """A predicted win inside the switch margin is noise: the planner must
+    stay on the even split unless the challenger is decisively better."""
+    a, b = three_models[:2]
+
+    # a single bucket pins every candidate's bucket choice, so the
+    # serial/even score ratio is exactly linear in the full-mesh scale and
+    # we can place it anywhere relative to the margin
+    bucket8 = (8,)
+
+    def planner(nd2_scale, margin):
+        cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                               n_devices=2, switch_margin=margin)
+        for m in (a, b):
+            _calibrate_width(cm, m, scale=1.0, n_devices=1,
+                             buckets=bucket8)
+            _calibrate_width(cm, m, scale=nd2_scale, n_devices=2,
+                             buckets=bucket8)
+        return cm
+
+    probe = planner(1.0, 0.0).plan_round([(a, 8), (b, 8)], bucket8)
+    ratio_at_unit = probe.candidates["serial"] / probe.candidates["even"]
+    # serial ~12% better than even: a real predicted win, inside the margin
+    nd2_scale = 0.88 / ratio_at_unit
+    plan = planner(nd2_scale, 0.25).plan_round([(a, 8), (b, 8)], bucket8)
+    assert plan.candidates["serial"] < plan.candidates["even"]  # would win
+    assert plan.strategy == "even"                              # but margin
+    # zero margin: the same scores switch
+    plan0 = planner(nd2_scale, 0.0).plan_round([(a, 8), (b, 8)], bucket8)
+    assert plan0.strategy == "serial"
+
+
+def test_fifo_planner_never_switches(three_models):
+    """round_planner="fifo" keeps the structural split even when the
+    calibrated scores say serializing is far cheaper."""
+    a, b = three_models[:2]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=2, round_planner="fifo")
+    for m in (a, b):
+        _calibrate_width(cm, m, scale=100.0, n_devices=1)
+        _calibrate_width(cm, m, scale=1.0, n_devices=2)
+    plan = cm.plan_round([(a, 8), (b, 8)], BUCKETS)
+    assert plan.strategy == "even"
+    assert set(plan.candidates) == {"even"}
+
+
+def test_single_model_round_is_structural(three_models):
+    """One model: the even split IS the full mesh; no extra candidates."""
+    a = three_models[0]
+    cm = SystolicCostModel(n_devices=8)
+    plan = cm.plan_round([(a, 8)], BUCKETS)
+    assert plan.strategy == "even" and plan.n_groups == 1
+    assert set(plan.candidates) == {"even"}
+
+
+def test_drain_rounds_consistent_with_adaptive_plans(three_models):
+    """The admission backlog estimate must price the same round sequence
+    the adaptive scheduler would actually form."""
+    a, b = three_models[:2]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=2)
+    for m in (a, b):
+        _calibrate_width(cm, m, scale=100.0, n_devices=1)
+        _calibrate_width(cm, m, scale=1.0, n_devices=2)
+    one = cm.plan_round([(a, 8), (b, 8)], BUCKETS)
+    rest = cm.plan_round([(a, 2), (b, 2)], BUCKETS)
+    assert cm.drain_rounds_ms([(a, 10), (b, 10)], BUCKETS) == pytest.approx(
+        one.predicted_ms + rest.predicted_ms)
+
+
+# ---------------------------------------------------------------------------
+# Variance tracking + quantile admission.
+# ---------------------------------------------------------------------------
+
+def test_fit_variance_closed_form():
+    cal = LatencyCalibrator(min_samples=2)
+    cal.observe("m", 1, 1.0, 10.0)
+    cal.observe("m", 1, 1.0, 30.0)
+    # constant predictor: scale = mean(y)/x = 20, SSE = (10-20)^2 + (30-20)^2
+    snap = cal.snapshot()["m"]["buckets"]["1"]
+    assert snap["scale"] == pytest.approx(20.0)
+    assert snap["resid_var_ms2"] == pytest.approx(200.0)   # SSE / (n - 1)
+    assert snap["resid_std_ms"] == pytest.approx(200.0 ** 0.5)
+    # quantile quote = scale * accel + z * std
+    expect = 20.0 * 1.0 + z_score(0.95) * 200.0 ** 0.5
+    assert cal.calibrated_ms("m", 1, 1.0, quantile=0.95) == \
+        pytest.approx(expect)
+    # the median quantile is the mean fit
+    assert cal.calibrated_ms("m", 1, 1.0, quantile=0.5) == \
+        pytest.approx(20.0)
+
+
+def test_quantile_admission_rejects_what_the_mean_admits(three_models):
+    """Inflated-variance fit: the p95 estimate must reject a request whose
+    mean estimate fits comfortably inside the SLO."""
+    a = three_models[0]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=2),
+                           admission_quantile=0.95)
+    accel = cm.predicted_ms(a, 1)
+    cm.observe(a, 1, accel * 10.0)
+    cm.observe(a, 1, accel * 30.0)       # scale 20, huge residual spread
+    mean_ms, calibrated = cm.expected_ms(a, 1)
+    assert calibrated
+    p95_ms, _ = cm.expected_ms(a, 1, quantile=0.95)
+    assert p95_ms > mean_ms
+    slo = (mean_ms + p95_ms) / 2.0       # between mean and tail
+    admitted_mean, pred_mean = cm.admit(a, slo, 0, (1,), quantile=0.5)
+    assert admitted_mean and pred_mean == pytest.approx(mean_ms)
+    admitted_p95, pred_p95 = cm.admit(a, slo, 0, (1,))   # default p95
+    assert not admitted_p95 and pred_p95 == pytest.approx(p95_ms)
+
+
+def test_zero_variance_quantile_equals_mean(three_models):
+    """Exact observations: p95 == mean, so quantile admission reproduces
+    the historical behavior when calibration is tight."""
+    a = three_models[0]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=2))
+    accel = cm.predicted_ms(a, 1)
+    for _ in range(3):
+        cm.observe(a, 1, accel * 50.0)
+    assert cm.expected_ms(a, 1, quantile=0.95)[0] == pytest.approx(
+        cm.expected_ms(a, 1)[0])
+
+
+def test_global_ratio_closes_mixed_units_window(three_models):
+    """Once ANY model is calibrated, an uncalibrated model's estimate uses
+    the global cross-model ratio (wall units) instead of raw accel-ms."""
+    a, b = three_models[:2]
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=2))
+    for _ in range(2):
+        cm.observe(a, 1, cm.predicted_ms(a, 1) * 40.0)
+    ms_b, calibrated_b = cm.expected_ms(b, 1)
+    assert calibrated_b                      # wall units via global ratio
+    assert ms_b == pytest.approx(cm.predicted_ms(b, 1) * 40.0)
+    # b's own fits take over once they exist
+    for _ in range(2):
+        cm.observe(b, 1, cm.predicted_ms(b, 1) * 80.0)
+    assert cm.expected_ms(b, 1)[0] == pytest.approx(
+        cm.predicted_ms(b, 1) * 80.0)
+
+
+def test_global_ratio_respects_fingerprints():
+    """A model whose fits were built under another fingerprint must not
+    leak into the global ratio for this one."""
+    cal = LatencyCalibrator(min_samples=2)
+    for _ in range(2):
+        cal.observe("m", 1, 1.0, 50.0, fingerprint="xla|ndev=1")
+    # same fingerprint: the global ratio answers for an unseen model
+    assert cal.calibrated_ms("other", 1, 2.0,
+                             fingerprint="xla|ndev=1") == pytest.approx(100.0)
+    # different fingerprint: no cross-contamination
+    assert cal.calibrated_ms("other2", 1, 2.0,
+                             fingerprint="pallas|ndev=1") is None
+
+
+# ---------------------------------------------------------------------------
+# CI tooling: bench_check ratios and run.py's stale-suite merge.
+# ---------------------------------------------------------------------------
+
+def _load_script(name):
+    path = os.path.join(ROOT, "scripts", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_check_ratio_regression_and_tolerance():
+    bc = _load_script("bench_check")
+    base = {"serve": {"serve.stream16.sync.xla": 150.0,
+                      "serve.stream16.async.xla": 100.0}}   # 1.5x
+    ok = {"serve": {"serve.stream16.sync.xla": 140.0,
+                    "serve.stream16.async.xla": 100.0}}     # 1.4x: within tol
+    bad = {"serve": {"serve.stream16.sync.xla": 90.0,
+                     "serve.stream16.async.xla": 100.0}}    # 0.9x: regressed
+    errors, _ = bc.compare(ok, base, tolerance=0.30)
+    assert errors == []
+    errors, _ = bc.compare(bad, base, tolerance=0.30)
+    assert len(errors) == 1 and "async_speedup" in errors[0]
+    # absolute floor applies even without a baseline
+    errors, _ = bc.compare(bad, None, tolerance=0.05)
+    assert len(errors) == 1
+    # a suite that did not run is skipped, not failed
+    errors, report = bc.compare({}, base, tolerance=0.30)
+    assert errors == [] and any("skipped" in line for line in report)
+
+
+def test_bench_check_flags_missing_keys_when_suite_ran():
+    bc = _load_script("bench_check")
+    drifted = {"serve": {"renamed.key": 100.0}}
+    errors, _ = bc.compare(drifted, None, tolerance=0.30)
+    assert len(errors) == 1 and "drifted" in errors[0]
+
+
+def test_run_json_merge_drops_stale_suites(tmp_path):
+    from benchmarks.run import merge_results
+    existing = {
+        "serve": {"serve.old_name": 1.0},            # replaced wholesale
+        "serve_sharded": {"keep.me": 2.0},           # untouched known suite
+        "removed_suite": {"zombie": 3.0},            # no longer registered
+    }
+    fresh = {"serve": {"serve.new_name": 4.0}}
+    merged = merge_results(existing, fresh,
+                           known_suites={"serve", "serve_sharded"})
+    assert merged == {"serve": {"serve.new_name": 4.0},
+                      "serve_sharded": {"keep.me": 2.0}}
+
+
+def test_run_json_end_to_end_merge(tmp_path):
+    """main() with --json prunes unknown suites from an existing file."""
+    import benchmarks.run as br
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps({"ghost_suite": {"zombie": 1.0},
+                                "serve": {"stale": 2.0}}))
+    # run one cheap registered suite for real so main() writes the file
+    br.main(["table3", "--json", str(path)])
+    out = json.loads(path.read_text())
+    assert "ghost_suite" not in out
+    assert out["serve"] == {"stale": 2.0}            # known suite kept
+    assert "table3" in out

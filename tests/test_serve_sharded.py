@@ -59,10 +59,13 @@ def two_models():
 
 
 def test_plan_round_composition(two_models):
+    """The structural "fifo" planner: even split, FIFO round-robin deal
+    (adaptive composition scoring is covered in test_round_planner.py)."""
     a, b = two_models
-    cm = SystolicCostModel(n_devices=8)
+    cm = SystolicCostModel(n_devices=8, round_planner="fifo")
     plan = cm.plan_round([(a, 8), (b, 8)], (1, 2, 4, 8))
     assert plan.n_groups == 2 and plan.n_devices == 8
+    assert plan.strategy == "even"
     assert [p.group for p in plan.parts] == [0, 1]       # FIFO round-robin
     # each part planned for its 4-device group: bucket 8 shards 4-wide
     for p in plan.parts:
@@ -180,3 +183,14 @@ def test_engine_fans_results_back_in_order(sharded):
 def test_round_jit_cache_is_bounded_and_calibration_sharded(sharded):
     assert sharded["jit_cache_stable"] is True
     assert sharded["calibration_sharded_cells"]     # e.g. ["4x4"]
+
+
+def test_adaptive_planner_serves_on_mesh(sharded):
+    """Adaptive composition scoring end-to-end on 8 devices: every request
+    ok, per-request fan-back bitwise, every dispatched round attributed to
+    a scored strategy (which one wins is measurement-dependent)."""
+    assert sharded["adaptive_ok"] is True
+    assert sharded["adaptive_fanback_bitwise"] is True
+    assert sharded["adaptive_rounds"] >= 1
+    assert sharded["adaptive_strategy_rounds_match"] is True
+    assert set(sharded["adaptive_strategies"]) <= {"even", "uneven", "serial"}
