@@ -16,18 +16,25 @@ kernel-level numbers live in kernels_micro.py.
 ``run_sharded`` is the multi-model skewed-traffic workload: three tiny_net
 variants under a weighted open-loop stream (the hot model dominates 4:2:1),
 served by the single-device sync baseline, by the cross-model round
-scheduler with the structural FIFO even split, and by the **adaptive**
-round planner that scores serial/even/uneven compositions in calibrated
-wall-ms per round.  Both sharded engines carry a latency calibrator fed by
-an unmeasured warm pass, so the adaptive planner's composition choices run
-on measured wall scales, not raw accel-ms (where sharding looks free).
-Acceptance: sharded >= sync and adaptive >= fifo in us/request;
-``scripts/bench_check.py`` guards both ratios against the committed
-baseline.  ``make bench-smoke`` exports
-``XLA_FLAGS=--xla_force_host_platform_device_count=2`` — one virtual
-device per container core; more would oversubscribe the CPU and measure
-contention, not scheduling (correctness on 8 virtual devices is pinned by
-tests/test_serve_sharded.py instead).  Reported us/request are wall-clock.
+scheduler with the structural FIFO even split, by the **adaptive** round
+planner that scores serial/even/uneven compositions in calibrated wall-ms
+per round, and by the **hybrid** planner (uneven groups hosting several
+models back-to-back) with mid-flight replanning turned on.  Every sharded
+engine carries a latency calibrator fed by an unmeasured warm pass, so
+composition choices run on measured wall scales, not raw accel-ms (where
+sharding looks free).  Acceptance: sharded >= sync in us/request; the
+planner comparisons (adaptive vs fifo, hybrid+replan vs fifo) expect
+**parity within noise** on this mesh — 2 shared-core virtual devices with
+3 models cannot produce layouts where adaptivity or hybrid packing differ
+structurally from the even split (that takes >= 4 devices; the wins are
+pinned by deterministic unit tests in tests/test_round_planner.py), so
+``scripts/bench_check.py`` guards those two ratios floor-only against the
+noise tolerance, not against a baseline sample.  ``make
+bench-smoke`` exports ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+— one virtual device per container core; more would oversubscribe the CPU
+and measure contention, not scheduling (correctness on 8 virtual devices
+is pinned by tests/test_serve_sharded.py instead).  Reported us/request
+are wall-clock.
 """
 import time
 
@@ -116,7 +123,7 @@ def run(backend: str = "xla"):
 
 SHARDED_BUCKETS = (1, 2, 4, 8)
 SHARDED_REQUESTS = 24
-SHARDED_ITERS = 6                    # multiple of the 3 modes: the rotated
+SHARDED_ITERS = 8                    # multiple of the 4 modes: the rotated
                                      # measurement order leads with each
                                      # engine equally often
 MODEL_WEIGHTS = (4.0, 2.0, 1.0)      # hot model dominates, all keep traffic
@@ -134,7 +141,8 @@ WARM_STREAMS = 2                     # unmeasured passes feeding calibration
 
 
 def _build_sharded_engine(backend: str, n_devices: int,
-                          round_planner: str = "fifo"):
+                          round_planner: str = "fifo",
+                          replan: bool = False):
     from repro.launch.mesh import make_data_mesh
     from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
                                       SystolicCostModel, VisionServeEngine)
@@ -142,24 +150,26 @@ def _build_sharded_engine(backend: str, n_devices: int,
     mesh = make_data_mesh(n_devices) if n_devices > 1 else None
     registry = _register_zoo3(ModelRegistry(backend=backend, mesh=mesh))
     # every engine gets its own calibrator so round composition (and the
-    # fifo-vs-adaptive comparison) runs in measured wall-ms after the warm
-    # passes — in raw accel-ms sharding looks free and adaptivity would
-    # chase simulator artifacts
+    # fifo-vs-adaptive-vs-hybrid comparison) runs in measured wall-ms
+    # after the warm passes — in raw accel-ms sharding looks free and
+    # adaptivity would chase simulator artifacts
     engine = VisionServeEngine(
         registry, cost_model=SystolicCostModel(
             n_devices=n_devices, round_planner=round_planner,
             calibrator=LatencyCalibrator(min_samples=2)),
         buckets=SHARDED_BUCKETS, pipelined=n_devices > 1,
         cross_model=n_devices > 1, max_in_flight=3,
-        batch_window_ms=2.0 if n_devices > 1 else 0.0)
+        batch_window_ms=2.0 if n_devices > 1 else 0.0,
+        replan=replan)
     engine.warmup()
     return engine
 
 
 def run_sharded(backend: str = "xla"):
     """Multi-model skewed open-loop stream: sharded cross-model rounds
-    (fifo and adaptive composition) vs the single-device sync baseline
-    (acceptance: sharded >= sync, adaptive >= fifo)."""
+    (fifo, adaptive, and hybrid-with-replanning composition) vs the
+    single-device sync baseline (acceptance: sharded >= sync; the planner
+    ratios are parity-within-noise on this mesh, guarded floor-only)."""
     import jax
 
     from repro.serving.vision import make_mixed_burst, stream_items
@@ -171,7 +181,9 @@ def run_sharded(backend: str = "xla"):
           f"{ndev} visible device(s)")
     engines = {"sync_1dev": _build_sharded_engine(backend, 1),
                "sharded_fifo": _build_sharded_engine(backend, ndev, "fifo"),
-               "sharded": _build_sharded_engine(backend, ndev, "adaptive")}
+               "sharded": _build_sharded_engine(backend, ndev, "adaptive"),
+               "sharded_hybrid": _build_sharded_engine(
+                   backend, ndev, "hybrid", replan=True)}
     reg = engines["sharded"].registry
     warms = [make_mixed_burst(reg, SHARDED_REQUESTS, seed=100 + i,
                               weights=MODEL_WEIGHTS)
@@ -209,7 +221,9 @@ def run_sharded(backend: str = "xla"):
              f"ips={ips:.0f} batches={m['batches']} rounds={m['rounds']} "
              f"cross_model_rounds={m['cross_model_rounds']} "
              f"max_round_models={m['max_round_models']} "
-             f"groups={m['max_round_groups']} strategies={strategies}")
+             f"groups={m['max_round_groups']} strategies={strategies} "
+             f"replans={m['replans']} "
+             f"idle_recovered={m['replan_idle_recovered_ms']:.1f}ms")
     speedup = us["sync_1dev"] / us["sharded"] if us["sharded"] else 0.0
     emit(f"serve_sharded.speedup.{backend}", "-",
          f"sharded/sync throughput ratio = {speedup:.2f}x on {ndev} "
@@ -221,6 +235,12 @@ def run_sharded(backend: str = "xla"):
          f"adaptive/fifo round-planner throughput ratio = "
          f"{adaptive_gain:.2f}x (fifo {us['sharded_fifo']:.0f}us/req, "
          f"adaptive {us['sharded']:.0f}us/req)")
+    hybrid_gain = (us["sharded_fifo"] / us["sharded_hybrid"]
+                   if us["sharded_hybrid"] else 0.0)
+    emit(f"serve_sharded.hybrid_vs_fifo.{backend}", "-",
+         f"hybrid+replan/fifo round-planner throughput ratio = "
+         f"{hybrid_gain:.2f}x (fifo {us['sharded_fifo']:.0f}us/req, "
+         f"hybrid {us['sharded_hybrid']:.0f}us/req)")
     for engine in engines.values():
         engine.close()
 

@@ -49,6 +49,14 @@ RATIOS = [
     ("adaptive_vs_fifo", "serve_sharded",
      "serve_sharded.stream24.sharded_fifo.xla",
      "serve_sharded.stream24.sharded.xla", 1.0, False),
+    # hybrid planner + mid-flight replanning vs the structural fifo split:
+    # floor-only for the same reason as adaptive/fifo — on the 2-device
+    # shared-core smoke mesh parity is the honest steady state (hybrid
+    # layouts need >= 3 models on >= 4 devices to differ structurally),
+    # so tracking a lucky baseline sample would ratchet noise into flakes
+    ("hybrid_vs_fifo", "serve_sharded",
+     "serve_sharded.stream24.sharded_fifo.xla",
+     "serve_sharded.stream24.sharded_hybrid.xla", 1.0, False),
 ]
 
 
@@ -128,29 +136,46 @@ def main(argv=None) -> int:
                     default=float(os.environ.get("BENCH_TOLERANCE", 0.30)),
                     help="allowed fractional ratio regression (CI runners "
                          "are noisy; ratios, not us, absorb most of it)")
+    ap.add_argument("--report", default=None,
+                    help="also write the printed report (plus the verdict)"
+                         " to this path — uploaded as a CI artifact so a"
+                         " regression can be diagnosed without re-running"
+                         " the smoke locally")
     args = ap.parse_args(argv)
 
+    lines = []
+
+    def say(msg):
+        lines.append(msg)
+        print(msg)
+
+    def finish(code):
+        if args.report:
+            with open(args.report, "w") as f:
+                f.write("\n".join(lines) + "\n")
+        return code
+
     if not os.path.exists(args.current):
-        print(f"bench-check: SKIP ({args.current} not found — run "
-              f"`make bench-smoke` first)")
-        return 0
+        say(f"bench-check: SKIP ({args.current} not found — run "
+            f"`make bench-smoke` first)")
+        return finish(0)
     with open(args.current) as f:
         current = json.load(f)
     baseline = load_baseline(args.baseline)
     if baseline is None:
-        print(f"bench-check: no committed baseline ({args.baseline}); "
-              f"checking absolute floors only")
+        say(f"bench-check: no committed baseline ({args.baseline}); "
+            f"checking absolute floors only")
     errors, report = compare(current, baseline, args.tolerance)
     for line in report:
-        print(f"  {line}")
+        say(f"  {line}")
     if errors:
-        print("bench-check: FAILED")
+        say("bench-check: FAILED")
         for e in errors:
-            print(f"  - {e}")
-        return 1
-    print(f"bench-check: OK ({len(report)} ratio(s) within "
-          f"{args.tolerance:.0%} tolerance)")
-    return 0
+            say(f"  - {e}")
+        return finish(1)
+    say(f"bench-check: OK ({len(report)} ratio(s) within "
+        f"{args.tolerance:.0%} tolerance)")
+    return finish(0)
 
 
 if __name__ == "__main__":

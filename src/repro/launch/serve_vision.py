@@ -21,9 +21,11 @@ of the mesh, and batches shard over their group's ``"data"`` axis.
 ``--warm-bursts`` replays the burst before the measured pass so the latency
 calibrator has enough observations for SLO admission to operate in
 calibrated wall-ms.  ``--round-planner`` picks the round composition
-strategy (adaptive scoring vs the structural FIFO even split) and
-``--admission-quantile`` the latency quantile SLO admission reasons at
-(default p95; 0.5 reproduces the historical mean-based admit).
+strategy (``hybrid`` > ``adaptive`` scoring vs the structural ``fifo``
+even split), ``--replan`` turns on mid-flight backfilling of device groups
+predicted to finish early, and ``--admission-quantile`` the latency
+quantile SLO admission reasons at (default p95; 0.5 reproduces the
+historical mean-based admit).
 """
 from __future__ import annotations
 
@@ -69,11 +71,19 @@ def main(argv=None):
                          " residual variance); 0.5 = the historical"
                          " mean-based admit")
     ap.add_argument("--round-planner", default="adaptive",
-                    choices=["fifo", "adaptive"],
+                    choices=["fifo", "adaptive", "hybrid"],
                     help="cross-model round composition: 'adaptive' scores"
                          " serial/even/uneven splits in calibrated wall-ms"
-                         " and picks the cheapest; 'fifo' always deals"
-                         " models onto the structural even split")
+                         " and picks the cheapest; 'hybrid' additionally"
+                         " scores uneven splits whose groups host several"
+                         " models back-to-back (priced at the admission"
+                         " quantile); 'fifo' always deals models onto the"
+                         " structural even split")
+    ap.add_argument("--replan", action="store_true",
+                    help="mid-flight replanning: backfill device groups"
+                         " predicted to finish early with the next warm"
+                         " FIFO-eligible batch (recovered idle-ms and"
+                         " replan counts land in the metrics snapshot)")
     ap.add_argument("--sync", action="store_true",
                     help="drain synchronously on the caller's thread instead"
                          " of the pipelined executor")
@@ -128,7 +138,7 @@ def main(argv=None):
             round_planner=args.round_planner,
             admission_quantile=args.admission_quantile),
         buckets=args.buckets, pipelined=not args.sync,
-        max_in_flight=args.max_in_flight)
+        max_in_flight=args.max_in_flight, replan=args.replan)
     engine.warmup()
 
     for i in range(args.warm_bursts):
@@ -153,6 +163,9 @@ def main(argv=None):
     snap["mode"] = "sync" if args.sync else "pipelined"
     snap["mesh_devices"] = args.mesh or 1
     snap["round_planner"] = args.round_planner
+    # the engine's resolved flag, not the CLI's: replanning needs the
+    # cross-model round scheduler, so --replan without --mesh stays off
+    snap["replan"] = bool(engine.replan)
     snap["admission_quantile"] = args.admission_quantile
     print(json.dumps(snap, indent=2, sort_keys=True))
     if args.json_path:

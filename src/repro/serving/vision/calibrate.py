@@ -56,14 +56,19 @@ guarded by one lock.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import threading
 from statistics import NormalDist
 from typing import Dict, List, Optional, Tuple
 
 
+@functools.lru_cache(maxsize=64)
 def z_score(quantile: float) -> float:
-    """Standard-normal z for a latency quantile in (0, 1); 0.5 -> 0 (mean)."""
+    """Standard-normal z for a latency quantile in (0, 1); 0.5 -> 0 (mean).
+    Cached: quantile quotes run on the scheduler hot path (every tail-
+    priced bucket sweep), and serving uses a handful of distinct
+    quantiles per process."""
     assert 0.0 < quantile < 1.0, quantile
     return NormalDist().inv_cdf(quantile)
 
@@ -145,6 +150,13 @@ class LatencyCalibrator:
         self._pooled: Dict[Tuple[str, int], _Fit] = {}
         self._fps: Dict[str, str] = {}       # model key -> fit fingerprint
         self._invalidations = 0
+        # partial-round observations (mid-flight replan dispatches) are
+        # monitored but never folded into the fits: a backfilled batch
+        # runs back-to-back behind its group's scheduled parts, so its
+        # measured wall-ms includes queueing the round-level fits must
+        # not learn as compute
+        self._partial_n = 0
+        self._partial_abs_resid = 0.0
         self._lock = threading.Lock()
 
     # -- drift ----------------------------------------------------------------
@@ -191,26 +203,49 @@ class LatencyCalibrator:
     # -- intake ---------------------------------------------------------------
     def observe(self, key: str, bucket: int, accel_ms: float,
                 wall_ms: float, n_devices: int = 1,
-                fingerprint: Optional[str] = None) -> Optional[float]:
+                fingerprint: Optional[str] = None,
+                partial: bool = False) -> Optional[float]:
         """Record one completed batch; returns the residual (measured minus
         the calibrated prediction *before* this observation) once this
         model is calibrated, else None.  The residual is charged against
         whichever fit ``calibrated_ms`` would have quoted — the cell's own
         fit, or the pooled per-model fallback — so pooled-regime SLO
         decisions are monitored too.  A ``fingerprint`` differing from the
-        one this model's fits were built under drops them first (drift)."""
+        one this model's fits were built under drops them first (drift).
+
+        ``partial=True`` marks a partial-round dispatch (the executor's
+        mid-flight replanner backfilling an idle group): the residual is
+        still computed and monitored, but the observation is NOT folded
+        into any fit — a backfilled batch is dispatched behind its group's
+        scheduled work, so its measured wall-ms carries queueing time that
+        would bias every round-level scale upward."""
         with self._lock:
             self._check_fingerprint_locked(key, fingerprint)
-            cell = self._cells.setdefault((key, bucket, n_devices), _Fit())
-            pooled = self._pooled.setdefault((key, n_devices), _Fit())
+            # .get, not setdefault: a partial observation must not create
+            # phantom n=0 cells that snapshot() would then report
+            cell = self._cells.get((key, bucket, n_devices))
+            pooled = self._pooled.get((key, n_devices))
             fit = None
-            if cell.n >= self.min_samples and cell.scale is not None:
+            if cell is not None and cell.n >= self.min_samples \
+                    and cell.scale is not None:
                 fit = cell
-            elif pooled.n >= self.min_samples and pooled.scale is not None:
+            elif pooled is not None and pooled.n >= self.min_samples \
+                    and pooled.scale is not None:
                 fit = pooled
             resid = None
             if fit is not None:
                 resid = wall_ms - fit.scale * accel_ms
+            if partial:
+                self._partial_n += 1
+                if resid is not None:
+                    self._partial_abs_resid += abs(resid)
+                return resid
+            if cell is None:
+                cell = self._cells.setdefault((key, bucket, n_devices),
+                                              _Fit())
+            if pooled is None:
+                pooled = self._pooled.setdefault((key, n_devices), _Fit())
+            if resid is not None:
                 fit.sum_abs_resid += abs(resid)
             cell.add(accel_ms, wall_ms)
             pooled.add(accel_ms, wall_ms)
@@ -313,6 +348,11 @@ class LatencyCalibrator:
             glob = self._global_fit_locked(None)
             if glob.n:
                 out["global"] = glob.summary()
+            if self._partial_n:
+                out["partial"] = {
+                    "n": self._partial_n,
+                    "mean_abs_resid_ms": (self._partial_abs_resid
+                                          / self._partial_n)}
             for (key, nd), fit in self._pooled.items():
                 entry = out.setdefault(key, {"pooled": {}, "buckets": {}})
                 if nd == 1:

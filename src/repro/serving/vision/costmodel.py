@@ -26,9 +26,13 @@ uses it four ways:
     power-of-two split, and uneven power-of-two splits sized proportional
     to queue depth — scores each in calibrated wall-ms via ``expected_ms``,
     and returns the argmin; the losing candidates' scores ride along on the
-    ``RoundPlan`` for metrics and debugging.  ``round_planner="fifo"``
-    keeps the structural even split unconditionally (the pre-adaptive
-    behavior, and the benchmark baseline);
+    ``RoundPlan`` for metrics and debugging.  ``round_planner="hybrid"``
+    additionally scores **hybrid** compositions — uneven power-of-two
+    groups that host several models back-to-back, priced at the admission
+    quantile so the shared groups' summed prediction errors are paid for
+    up front.  ``round_planner="fifo"`` keeps the structural even split
+    unconditionally (the pre-adaptive behavior, and the benchmark
+    baseline);
   * admission control — a request with an SLO is rejected up front when the
     predicted time to drain the queue ahead of it (plus its own batch)
     already exceeds the SLO.  Admission prices each batch at a configurable
@@ -83,10 +87,13 @@ class RoundPlan:
     back-to-back.  ``group_sizes`` (devices per group, in group order) is
     set by ``SystolicCostModel.plan_round``; None means equal groups of
     ``n_devices // n_groups`` (duck-typed planners that predate uneven
-    splits).  ``strategy`` names the composition that won and
-    ``candidates`` records every scored composition's predicted ms per
-    served request — the planner's reasoning is part of the plan, so
-    metrics and debugging can see what adaptivity rejected."""
+    splits).  ``group_ms`` is each group's predicted serial sum — the
+    slowest entry is ``predicted_ms``, and the gaps to it are the
+    predicted idle the executor's mid-flight replanner may backfill.
+    ``strategy`` names the composition that won and ``candidates`` records
+    every scored composition's predicted ms per served request — the
+    planner's reasoning is part of the plan, so metrics and debugging can
+    see what adaptivity rejected."""
     parts: List[RoundPart]
     n_devices: int               # mesh size the round was planned for
     n_groups: int
@@ -94,6 +101,7 @@ class RoundPlan:
     group_sizes: Optional[List[int]] = None
     strategy: str = "even"
     candidates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    group_ms: Optional[List[float]] = None
 
     @property
     def served(self) -> int:
@@ -173,7 +181,7 @@ class SystolicCostModel:
                  round_planner: str = "adaptive",
                  admission_quantile: float = 0.95,
                  switch_margin: float = 0.25):
-        assert round_planner in ("fifo", "adaptive"), round_planner
+        assert round_planner in ("fifo", "adaptive", "hybrid"), round_planner
         assert 0.0 < admission_quantile < 1.0, admission_quantile
         assert switch_margin >= 0.0, switch_margin
         self.cfg = cfg
@@ -182,7 +190,9 @@ class SystolicCostModel:
         self.calibrator = calibrator
         self.n_devices = max(1, int(n_devices))
         # "adaptive": plan_round scores serial/even/uneven compositions and
-        # returns the argmin; "fifo": the structural even split always.
+        # returns the argmin; "hybrid": adaptive plus compositions whose
+        # uneven groups host several models back-to-back; "fifo": the
+        # structural even split always.
         self.round_planner = round_planner
         # latency quantile admit() prices batches at (0.5 = mean).  Only
         # bites once the calibrator carries residual variance; accel-ms
@@ -255,15 +265,18 @@ class SystolicCostModel:
         return accel, False
 
     def observe(self, model: RegisteredModel, batch: int,
-                measured_ms: float, n_devices: int = 1) -> Optional[float]:
+                measured_ms: float, n_devices: int = 1,
+                partial: bool = False) -> Optional[float]:
         """Feed one completed batch's measured wall latency back into the
-        calibrator; returns the calibration residual when available."""
+        calibrator; returns the calibration residual when available.
+        ``partial`` marks a mid-flight replan dispatch — monitored but
+        excluded from the fits (see ``LatencyCalibrator.observe``)."""
         if self.calibrator is None:
             return None
         return self.calibrator.observe(
             model.key, batch, self.sharded_accel_ms(model, batch, n_devices),
             measured_ms, n_devices=n_devices,
-            fingerprint=self.fingerprint(model))
+            fingerprint=self.fingerprint(model), partial=partial)
 
     # -- scheduling ---------------------------------------------------------
     def plan_bucket(self, model: RegisteredModel, queued: int,
@@ -310,7 +323,20 @@ class SystolicCostModel:
           tail shares the rest);
         * ``serial`` — no split: every model's batch runs back-to-back on
           the full mesh (wins when per-group microbatches are too small to
-          amortize dispatch, i.e. the split is *not* actually faster).
+          amortize dispatch, i.e. the split is *not* actually faster);
+        * ``hybrid`` (``round_planner="hybrid"`` only) — groups may be
+          uneven in size AND host several models back-to-back: every
+          descending power-of-two partition of the mesh into *fewer*
+          groups than models, models packed onto groups greedily by
+          predicted work (LPT).  This is the composition family the other
+          three cannot express: a group that finishes its one model early
+          idles for the rest of the round, while a hybrid group runs a
+          second model in that window.  Because a shared group's wall-ms
+          is a SUM of batches — prediction errors add, and an optimistic
+          mean would chase compositions that serialize more work — hybrid
+          candidates are priced at the cost model's **admission quantile**
+          (when the caller did not fix one), so the new family pays for
+          its own serialization risk up front.
 
         Candidates are compared on predicted **ms per served request**
         (``predicted_ms / served``), not raw round latency — different
@@ -325,7 +351,7 @@ class SystolicCostModel:
         ``RoundPlan.candidates``."""
         assert models
         strategies = [("even", self._even_assignment(len(models)))]
-        if self.round_planner == "adaptive":
+        if self.round_planner in ("adaptive", "hybrid"):
             uneven = self._uneven_assignment(models)
             if uneven is not None:
                 strategies.append(("uneven", uneven))
@@ -333,12 +359,18 @@ class SystolicCostModel:
                     and strategies[0][1][1] != [self.n_devices]:
                 strategies.append(
                     ("serial", ([0] * len(models), [self.n_devices])))
+        if self.round_planner == "hybrid":
+            hybrid = self._hybrid_assignment(models, buckets,
+                                             quantile=quantile)
+            if hybrid is not None:
+                strategies.append(("hybrid", hybrid))
         best: Optional[RoundPlan] = None
         best_score = 0.0
         scores: Dict[str, float] = {}
         for name, (group_of, sizes) in strategies:
-            plan = self._score_assignment(models, buckets, group_of, sizes,
-                                          name, quantile=quantile)
+            plan = self._score_assignment(
+                models, buckets, group_of, sizes, name,
+                quantile=self._strategy_quantile(name, quantile))
             score = plan.predicted_ms / max(1, plan.served)
             scores[name] = score
             if best is None:
@@ -351,6 +383,18 @@ class SystolicCostModel:
         assert best is not None
         best.candidates = scores
         return best
+
+    def _strategy_quantile(self, strategy: str,
+                           quantile: Optional[float]) -> Optional[float]:
+        """The latency quantile one candidate family is priced at.  An
+        explicit caller quantile (admission drains) applies everywhere;
+        otherwise only hybrid compositions pay the admission quantile —
+        their shared groups sum several batches' errors, so they must
+        clear the tail-priced bar before displacing a composition scored
+        at the mean."""
+        if quantile is not None:
+            return quantile
+        return self.admission_quantile if strategy == "hybrid" else None
 
     def _even_assignment(self, n_models: int
                          ) -> Tuple[List[int], List[int]]:
@@ -387,6 +431,78 @@ class SystolicCostModel:
             return None
         return group_of, sizes
 
+    def _hybrid_assignment(self, models: Sequence[Tuple[RegisteredModel,
+                                                        int]],
+                           buckets: Sequence[int],
+                           quantile: Optional[float] = None
+                           ) -> Optional[Tuple[List[int], List[int]]]:
+        """Best hybrid composition: groups uneven in size AND hosting
+        several models back-to-back.  The layout space is every descending
+        power-of-two partition of the mesh into 2..len(models)-1 groups —
+        fewer groups than models, so at least one group is shared (the
+        one-group-per-model layouts are the uneven family, one group is
+        serial).  Groups laid out largest-first keeps every reachable
+        layout inside ``power_of_two_partitions``, the same finite set
+        ``warmup`` precompiles for the uneven splits.
+
+        Models are packed onto groups LPT-style: visited in decreasing
+        standalone cost, each placed on the group whose load-after-adding
+        is smallest (the cost of a model DEPENDS on its group's width —
+        per-device microbatch pricing — so placement re-prices per
+        candidate group).  Returns the argmin layout by predicted ms per
+        served request, or None when no hybrid layout exists."""
+        n = len(models)
+        if n < 3 or self.n_devices < 2:
+            return None
+        q = self._strategy_quantile("hybrid", quantile)
+        # one bucket plan per (model, group width) serves the whole sweep:
+        # packing and scoring both depend only on the width a model runs
+        # at, so the partition enumeration must not re-sweep buckets (and
+        # re-quote the calibrator) per layout — this memo is what keeps
+        # hybrid planning cheap enough for the scheduler hot path
+        plans: Dict[Tuple[int, int], BucketPlan] = {}
+
+        def plan_for(i: int, width: int) -> BucketPlan:
+            if (i, width) not in plans:
+                model, depth = models[i]
+                plans[(i, width)] = self.plan_bucket(
+                    model, depth, buckets, group_size=width, quantile=q)
+            return plans[(i, width)]
+
+        best: Optional[Tuple[List[int], List[int]]] = None
+        best_score = 0.0
+        for k in range(2, n):
+            for sizes in power_of_two_partitions(self.n_devices, k):
+                group_of = self._pack_lpt(
+                    n, sizes, lambda i, w: plan_for(i, w).predicted_ms)
+                group_ms = [0.0] * len(sizes)
+                served = 0
+                for i, grp in enumerate(group_of):
+                    p = plan_for(i, sizes[grp])
+                    group_ms[grp] += p.predicted_ms
+                    served += p.served
+                score = max(group_ms) / max(1, served)
+                if best is None or score < best_score:
+                    best, best_score = (group_of, list(sizes)), score
+        return best
+
+    def _pack_lpt(self, n_models: int, sizes: Sequence[int],
+                  cost) -> List[int]:
+        """Longest-processing-time packing of models onto sized groups:
+        heaviest model first, each onto the group where its arrival leaves
+        the smallest load.  ``cost(model index, group width) -> ms``
+        re-prices per width (a batch's cost depends on how wide it
+        shards)."""
+        order = sorted(range(n_models), key=lambda i: (-cost(i, sizes[0]), i))
+        load = [0.0] * len(sizes)
+        group_of = [0] * n_models
+        for i in order:
+            grp = min(range(len(sizes)),
+                      key=lambda g: (load[g] + cost(i, sizes[g]), g))
+            group_of[i] = grp
+            load[grp] += cost(i, sizes[grp])
+        return group_of
+
     def _score_assignment(self, models: Sequence[Tuple[RegisteredModel, int]],
                           buckets: Sequence[int], group_of: List[int],
                           sizes: List[int], strategy: str,
@@ -402,7 +518,8 @@ class SystolicCostModel:
             parts.append(RoundPart(model.key, plan, grp))
             group_ms[grp] += plan.predicted_ms
         return RoundPlan(parts, self.n_devices, len(sizes), max(group_ms),
-                         group_sizes=list(sizes), strategy=strategy)
+                         group_sizes=list(sizes), strategy=strategy,
+                         group_ms=group_ms)
 
     def drain_ms(self, model: RegisteredModel, queued: int,
                  buckets: Sequence[int],

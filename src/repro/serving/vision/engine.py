@@ -54,6 +54,17 @@ Request lifecycle:
   quantity that matters ("when is my batch done"), and it over- rather than
   under-estimates shared-group parts.
 
+  mid-flight replanning (``replan=True``) — a round costs its slowest
+  group, so every other group is predicted to idle from its own end until
+  the round's.  Right after dispatching a round, the device thread
+  backfills any group predicted to finish >= one planning quantum early
+  with the next FIFO-eligible queued batch whose jit entry is already warm
+  and whose predicted latency fits the idle window (``_replan_round``).
+  Backfilled parts ride the round's pipeline slot and fan back through the
+  completer like scheduled parts, but their latency observations are
+  flagged ``partial`` so calibration fits never learn the queueing time a
+  back-to-back dispatch carries.
+
   flush()
       -> waits for the pipeline to drain (or, with ``pipelined=False``,
          drains synchronously on the caller's thread — the PR-1 behavior,
@@ -139,15 +150,21 @@ class _Prepared:
     batch: Batch
     plan: BucketPlan
     devices: Optional[tuple] = None   # device group (round scheduler only)
+    replanned: bool = False           # mid-flight backfill, not a round part
 
 
 @dataclasses.dataclass
 class _Round:
     """A co-scheduled cross-model round travelling as ONE pipeline unit
-    (one ``max_in_flight`` slot, one in-flight increment)."""
+    (one ``max_in_flight`` slot, one in-flight increment).  ``groups`` and
+    ``group_ms`` (device tuples and predicted per-group serial sums, in
+    group order) feed the mid-flight replanner: the gap between a group's
+    predicted end and the round's predicted end is backfillable idle."""
     parts: List[_Prepared]
     predicted_ms: float               # slowest device group's serial sum
     n_groups: int
+    groups: Optional[List[Optional[tuple]]] = None
+    group_ms: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -168,7 +185,9 @@ class VisionServeEngine:
                  pipelined: bool = True,
                  max_in_flight: int = 2,
                  batch_window_ms: float = 0.0,
-                 cross_model: Optional[bool] = None):
+                 cross_model: Optional[bool] = None,
+                 replan: bool = False,
+                 replan_quantum_ms: Optional[float] = None):
         self.registry = registry
         # mesh comes in through the registry (it owns placement); the
         # engine owns scheduling over its device list
@@ -199,6 +218,14 @@ class VisionServeEngine:
         # bounded latency hit for fuller buckets under bursty traffic.
         # 0 (default) forms batches as soon as the pipeline has a free slot.
         self.batch_window_ms = max(0.0, float(batch_window_ms))
+        # mid-flight replanning: when a round's composition leaves a device
+        # group predicted to finish >= one planning quantum before the
+        # round's predicted end, the device thread backfills that group
+        # with the next FIFO-eligible warm batch (see _replan_round).
+        # Quantum default: the round's smallest scheduled batch — the
+        # granularity the planner itself quantizes work at.
+        self.replan = bool(replan) and self.cross_model
+        self.replan_quantum_ms = replan_quantum_ms
         self._queue = RequestQueue()
         self._results: Dict[int, VisionResult] = {}
         self._futures: Dict[int, VisionFuture] = {}
@@ -483,8 +510,11 @@ class VisionServeEngine:
             return None
         self.metrics.on_round(len(parts), rplan.n_groups,
                               strategy=getattr(rplan, "strategy", None),
-                              candidates=getattr(rplan, "candidates", None))
-        return _Round(parts, rplan.predicted_ms, rplan.n_groups)
+                              candidates=getattr(rplan, "candidates", None),
+                              group_sizes=getattr(rplan, "group_sizes", None))
+        return _Round(parts, rplan.predicted_ms, rplan.n_groups,
+                      groups=list(groups),
+                      group_ms=getattr(rplan, "group_ms", None))
 
     def _round_done(self, predicted_ms: float) -> None:
         """Release a round's in-flight accounting and depth slot."""
@@ -495,6 +525,106 @@ class VisionServeEngine:
             self._done_cv.notify_all()
         self.metrics.on_inflight(-1)
         self._depth_sem.release()
+
+    # -- mid-flight replanning ------------------------------------------------
+    def _replan_round(self, rnd: "_Round", outs: List[tuple]) -> None:
+        """Backfill a dispatched round's predicted-idle device groups with
+        queued work (runs on the device thread, right after the round's
+        scheduled parts were dispatched).
+
+        A round costs its slowest group; every other group finishes early
+        by its ``group_ms`` gap and then idles — the utilization leak the
+        hybrid planner shrinks structurally and this replanner recovers at
+        runtime.  Any group predicted to finish at least one planning
+        quantum (the round's smallest scheduled batch, or
+        ``replan_quantum_ms``) before the round's predicted end gets the
+        next FIFO-eligible batch whose jit entry is already warm and whose
+        predicted latency fits inside the idle window, dispatched
+        back-to-back onto the idle group.  Dispatch is async, so a
+        misprediction costs nothing extra — the device stream serializes
+        its own work — and the fit-inside-the-window bound keeps the
+        round's predicted end authoritative.  Backfilled parts ride the
+        round's existing pipeline slot; the completer fans their results
+        exactly like scheduled parts, but their latency observations are
+        flagged partial so round-level calibration fits ignore them."""
+        group_ms = list(rnd.group_ms or [])
+        if len(group_ms) < 2 or rnd.groups is None:
+            return
+        round_end = max(group_ms)
+        quantum = self.replan_quantum_ms
+        if quantum is None:
+            quantum = min(p.plan.predicted_ms for p in rnd.parts)
+        if quantum <= 0.0:
+            return
+        exhausted: set = set()
+        while True:
+            eligible = [g for g in range(len(group_ms))
+                        if g not in exhausted
+                        and round_end - group_ms[g] >= quantum]
+            if not eligible:
+                return
+            gi = min(eligible, key=lambda g: (group_ms[g], g))
+            prep = self._pop_warm_batch(rnd.groups[gi],
+                                        round_end - group_ms[gi])
+            if prep is None:
+                # nothing queued is warm for (or fits) THIS group; others
+                # may still be backfillable.  Exhaustion is sticky: the
+                # queue only shrinks during the loop, so a group that had
+                # no eligible batch cannot gain one
+                exhausted.add(gi)
+                continue
+            try:
+                logits = self.registry.apply(prep.batch.model,
+                                             prep.batch.images,
+                                             devices=prep.devices)
+            except Exception as exc:
+                logits = _BatchError(exc)
+            outs.append((prep, logits, self._clock()))
+            group_ms[gi] += prep.plan.predicted_ms
+            self.metrics.on_replan(prep.plan.predicted_ms)
+
+    def _pop_warm_batch(self, group: Optional[tuple],
+                        idle_ms: float) -> Optional[_Prepared]:
+        """Pop and form the next FIFO-eligible batch for an idle device
+        group: the oldest queued model whose best bucket for the group is
+        already compiled AND predicted to fit inside ``idle_ms``.  None
+        when nothing eligible is queued."""
+        for model_key, depth, _ in self._queue.snapshot():
+            model = self.registry.get(model_key)
+            try:
+                if group is not None:
+                    plan = self.cost_model.plan_bucket(
+                        model, depth, self.buckets, group_size=len(group))
+                else:
+                    plan = self.cost_model.plan_bucket(model, depth,
+                                                       self.buckets)
+            except Exception:
+                continue
+            if plan.predicted_ms > idle_ms:
+                continue
+            if not self._is_warm(model_key, plan.bucket, group):
+                continue
+            reqs = self._queue.pop(model_key, plan.served)
+            if not reqs:
+                continue              # a concurrent pop drained this model
+            try:
+                batch = form_batch(reqs, plan.bucket, model.resolution)
+            except Exception as exc:
+                self._fail(reqs, plan, exc, in_flight=False)
+                continue
+            return _Prepared(batch, plan, devices=group, replanned=True)
+        return None
+
+    def _is_warm(self, model_key: str, bucket: int,
+                 group: Optional[tuple]) -> bool:
+        """Whether the registry already compiled this (model, bucket,
+        group) — replanning must never trigger a compile under traffic.
+        Registries without the ``is_compiled`` hook (duck-typed stubs) are
+        treated as always warm."""
+        probe = getattr(self.registry, "is_compiled", None)
+        if probe is None:
+            return True
+        return bool(probe(model_key, bucket, devices=group))
 
     def _device_loop(self) -> None:
         try:
@@ -517,6 +647,8 @@ class VisionServeEngine:
                         except Exception as exc:
                             logits = _BatchError(exc)
                         outs.append((p, logits, self._clock()))
+                    if self.replan:
+                        self._replan_round(item, outs)
                     self._complete_q.put((item, outs, t0))
                     continue
                 try:
@@ -623,13 +755,16 @@ class VisionServeEngine:
         model_key = batch.model
         run_ms = (t1 - (t0 if service_start is None else service_start)) * 1e3
         nd = getattr(plan, "n_devices", 1)
-        if nd == 1:
-            resid = self.cost_model.observe(self.registry.get(model_key),
-                                            plan.bucket, run_ms)
-        else:
-            resid = self.cost_model.observe(self.registry.get(model_key),
-                                            plan.bucket, run_ms,
-                                            n_devices=nd)
+        # kwargs built up so duck-typed cost models predating n_devices /
+        # partial keep working; replanned (partial-round) dispatches are
+        # flagged so calibration fits don't learn their queueing time
+        obs_kw = {}
+        if nd != 1:
+            obs_kw["n_devices"] = nd
+        if getattr(item, "replanned", False):
+            obs_kw["partial"] = True
+        resid = self.cost_model.observe(self.registry.get(model_key),
+                                        plan.bucket, run_ms, **obs_kw)
         self.metrics.on_batch(model_key, batch.fill, plan.bucket, run_ms,
                               plan.predicted_ms, calibrated=plan.calibrated,
                               resid_ms=resid)
@@ -693,10 +828,15 @@ class VisionServeEngine:
                         if grp not in seen:
                             seen.add(grp)
                             groups.append(grp)
-            if getattr(self.cost_model, "round_planner", None) == "adaptive":
+            if getattr(self.cost_model, "round_planner",
+                       None) in ("adaptive", "hybrid"):
                 # uneven splits are laid out largest-group-first, so the
                 # reachable layouts are exactly the descending power-of-two
-                # partitions of the mesh into 2..|models| groups
+                # partitions of the mesh into 2..|models| groups.  Hybrid
+                # compositions draw from the SAME set (partitions into
+                # fewer groups than models), so one sweep covers both —
+                # and since replanning may land any model on any group,
+                # prewarm compiles every model on every warmed group.
                 for m in range(2, len(ks) + 1):
                     for sizes in power_of_two_partitions(
                             len(self._devices), m):

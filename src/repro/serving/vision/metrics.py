@@ -126,6 +126,12 @@ class ServeMetrics:
         self.round_strategies: Dict[str, int] = {}   # strategy -> rounds won
         self.round_margin = LatencyStat()
         self.round_pred_err = LatencyStat()  # |predicted - measured| per round
+        # hybrid compositions: which group-size layout won ("4+2+2" -> count)
+        self.hybrid_compositions: Dict[str, int] = {}
+        # mid-flight replanning: batches backfilled onto predicted-idle
+        # groups, and the predicted idle wall-ms those batches recovered
+        self.replans = 0
+        self.replan_idle_recovered_ms = 0.0
 
     def reset(self) -> None:
         """Zero every counter/distribution (e.g. after warm-up traffic so a
@@ -178,7 +184,8 @@ class ServeMetrics:
 
     def on_round(self, n_models: int, n_groups: int, *,
                  strategy: Optional[str] = None,
-                 candidates: Optional[Dict[str, float]] = None) -> None:
+                 candidates: Optional[Dict[str, float]] = None,
+                 group_sizes: Optional[List[int]] = None) -> None:
         """One cross-model round dispatched: ``n_models`` batches
         co-scheduled over ``n_groups`` device groups.  ``strategy`` is the
         composition the planner chose; ``candidates`` maps every scored
@@ -186,7 +193,10 @@ class ServeMetrics:
         margin (best alternative minus chosen) is signed: positive = the
         chosen composition was predicted cheaper by that much per request,
         negative = the switch hysteresis kept the structural split despite
-        a challenger predicted cheaper by that much."""
+        a challenger predicted cheaper by that much.  When a hybrid
+        composition wins, its ``group_sizes`` layout is histogrammed
+        (``"4+2+2"``) so a deployment can see which shapes the packer
+        actually uses."""
         with self._lock:
             self.rounds += 1
             if n_models > 1:
@@ -201,6 +211,19 @@ class ServeMetrics:
                               if name != strategy]
                     self.round_margin.record(
                         min(losers) - candidates[strategy])
+                if strategy == "hybrid" and group_sizes:
+                    layout = "+".join(str(s) for s in group_sizes)
+                    self.hybrid_compositions[layout] = \
+                        self.hybrid_compositions.get(layout, 0) + 1
+
+    def on_replan(self, recovered_ms: float) -> None:
+        """One batch backfilled mid-flight onto a predicted-idle device
+        group; ``recovered_ms`` is the predicted idle wall-ms it filled
+        (the batch's own predicted latency — it was only dispatched
+        because it fit inside the group's idle window)."""
+        with self._lock:
+            self.replans += 1
+            self.replan_idle_recovered_ms += recovered_ms
 
     def on_round_complete(self, predicted_ms: float,
                           measured_ms: float) -> None:
@@ -264,6 +287,9 @@ class ServeMetrics:
                 "round_strategies": dict(self.round_strategies),
                 "round_margin_ms_per_req": self.round_margin.summary(),
                 "round_pred_abs_err_ms": self.round_pred_err.summary(),
+                "hybrid_compositions": dict(self.hybrid_compositions),
+                "replans": self.replans,
+                "replan_idle_recovered_ms": self.replan_idle_recovered_ms,
                 "max_in_flight": self.max_in_flight,
                 "host_busy_s": self.host_busy_s,
                 "device_busy_s": self.device_busy_s,

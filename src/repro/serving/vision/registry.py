@@ -193,6 +193,17 @@ class ModelRegistry:
             self._jit[cache_key] = self._build_apply(model)
         return self._jit[cache_key](params, x)
 
+    def is_compiled(self, key: str, bucket: int,
+                    devices: Optional[Sequence] = None) -> bool:
+        """True when ``apply(key, <bucket-sized batch>, devices=...)``
+        would hit an already-built jit entry — the executor's mid-flight
+        replanner only backfills idle groups with warm entries, so a
+        replan dispatch never compiles under traffic."""
+        devs = tuple(devices) if devices is not None else self.devices
+        if devs is None:
+            return (key, bucket) in self._jit
+        return (key, bucket, tuple(d.id for d in devs)) in self._jit
+
     def prewarm(self, key: str, buckets, *, host: bool = True,
                 device: bool = True,
                 groups: Optional[Sequence[Sequence]] = None) -> None:

@@ -214,6 +214,172 @@ def test_drain_rounds_consistent_with_adaptive_plans(three_models):
 
 
 # ---------------------------------------------------------------------------
+# Hybrid compositions: uneven groups hosting several models back-to-back.
+# ---------------------------------------------------------------------------
+
+def _hybrid_fleet():
+    reg = ModelRegistry(backend="xla")
+    net = zoo.tiny_net(resolution=16, width=8)
+    hot = reg.register(net, "fuse_full", key="hot")
+    colds = [reg.register(net, "depthwise", key=f"cold_{i}")
+             for i in range(3)]
+    return hot, colds
+
+
+def _calibrate_scales(cm, models, scales):
+    for m in models:
+        for nd, scale in scales.items():
+            _calibrate_width(cm, m, scale=scale, n_devices=nd)
+
+
+def test_hybrid_beats_serial_even_and_uneven():
+    """8 devices, 4 models (hot depth 8 between three cold depth 1), on a
+    machine where only 4-wide groups are cheap: even [2,2,2,2], uneven
+    [4,2,1,1], and serial [8] all execute something at an expensive width,
+    while the hybrid [4,4] packing — groups hosting several models
+    back-to-back — stays on 4-wide groups throughout.  That composition
+    is inexpressible for the other three families, and the planner must
+    find it and record every family's score."""
+    hot, colds = _hybrid_fleet()
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=8, round_planner="hybrid")
+    _calibrate_scales(cm, [hot] + colds,
+                      {1: 100.0, 2: 100.0, 4: 1.0, 8: 100.0})
+    models = [(colds[0], 1), (hot, 8), (colds[1], 1), (colds[2], 1)]
+    plan = cm.plan_round(models, BUCKETS)
+    assert plan.strategy == "hybrid"
+    assert set(plan.candidates) == {"even", "uneven", "serial", "hybrid"}
+    for loser in ("even", "uneven", "serial"):
+        assert plan.candidates["hybrid"] < plan.candidates[loser]
+    assert plan.group_sizes == [4, 4]
+    by_group = {}
+    for p in plan.parts:
+        by_group.setdefault(p.group, []).append(p.key)
+    assert max(len(keys) for keys in by_group.values()) >= 2  # shared group
+    # group_ms carries per-group serial sums; the slowest IS the round
+    assert max(plan.group_ms) == pytest.approx(plan.predicted_ms)
+    assert plan.predicted_ms / plan.served == pytest.approx(
+        plan.candidates["hybrid"])
+
+
+def test_adaptive_planner_never_emits_hybrid():
+    """round_planner="adaptive" keeps the PR-4 three-family behavior even
+    in a scenario where a hybrid composition would win."""
+    hot, colds = _hybrid_fleet()
+    cm = SystolicCostModel(calibrator=LatencyCalibrator(min_samples=1),
+                           n_devices=8, round_planner="adaptive")
+    _calibrate_scales(cm, [hot] + colds,
+                      {1: 100.0, 2: 100.0, 4: 1.0, 8: 100.0})
+    plan = cm.plan_round([(colds[0], 1), (hot, 8), (colds[1], 1),
+                          (colds[2], 1)], BUCKETS)
+    assert set(plan.candidates) == {"even", "uneven", "serial"}
+
+
+def test_hybrid_layouts_are_warmup_reachable():
+    """Every layout the hybrid packer can emit is a descending
+    power-of-two partition of the mesh into fewer groups than models —
+    exactly the finite set warmup() precompiles."""
+    hot, colds = _hybrid_fleet()
+    cm = SystolicCostModel(n_devices=8, round_planner="hybrid")
+    models = [hot] + colds
+    for depths in [(8, 1, 1, 1), (5, 2, 1, 1), (2, 2, 2, 2), (1, 1, 9, 1)]:
+        hy = cm._hybrid_assignment(list(zip(models, depths)), BUCKETS)
+        assert hy is not None
+        group_of, sizes = hy
+        assert sizes == sorted(sizes, reverse=True)
+        assert sizes in power_of_two_partitions(8, len(sizes))
+        assert 2 <= len(sizes) < len(models)
+        assert set(group_of) <= set(range(len(sizes)))
+    # two models: sharing them on one group IS the serial family — no
+    # hybrid layout exists
+    assert cm._hybrid_assignment([(hot, 4), (colds[0], 4)], BUCKETS) is None
+
+
+def test_hybrid_candidates_pay_the_admission_quantile():
+    """Hybrid scores are tail-priced: a shared group's wall is a sum of
+    batches, so the hybrid family is scored at the admission quantile
+    while the other families stay at the mean.  With residual variance in
+    the fits, the p95-priced hybrid score must exceed the mean-priced one
+    (admission_quantile=0.5 => z=0 => mean) while even is untouched."""
+    hot, colds = _hybrid_fleet()
+    cal = LatencyCalibrator(min_samples=1)
+    cm_tail = SystolicCostModel(calibrator=cal, n_devices=8,
+                                round_planner="hybrid",
+                                admission_quantile=0.95)
+    _calibrate_scales(cm_tail, [hot] + colds,
+                      {1: 100.0, 2: 100.0, 4: 1.0, 8: 100.0})
+    # inflate residual variance on the widths hybrid runs at
+    for m in [hot] + colds:
+        for b in BUCKETS:
+            if b % 4 == 0:
+                accel = cm_tail.sharded_accel_ms(m, b, 4)
+                cm_tail.observe(m, b, accel * 0.5, n_devices=4)
+                cm_tail.observe(m, b, accel * 1.5, n_devices=4)
+    cm_mean = SystolicCostModel(calibrator=cal, n_devices=8,
+                                round_planner="hybrid",
+                                admission_quantile=0.5)
+    models = [(colds[0], 1), (hot, 8), (colds[1], 1), (colds[2], 1)]
+    tail = cm_tail.plan_round(models, BUCKETS)
+    mean = cm_mean.plan_round(models, BUCKETS)
+    assert tail.candidates["hybrid"] > mean.candidates["hybrid"]
+    assert tail.candidates["even"] == pytest.approx(
+        mean.candidates["even"])
+    # an explicit caller quantile (admission drains) overrides both
+    drained = cm_tail.plan_round(models, BUCKETS, quantile=0.5)
+    assert drained.candidates["hybrid"] == pytest.approx(
+        mean.candidates["hybrid"])
+
+
+class _RecordingRegistry:
+    """Delegates model lookup to a real registry but fakes an 8-device
+    mesh and records prewarm calls — warmup only slices, measures, and
+    forwards device groups, so plain ints stand in for devices."""
+
+    def __init__(self, inner, n_devices=8):
+        self._inner = inner
+        self.devices = tuple(range(n_devices))
+        self.prewarmed = []
+
+    def get(self, key):
+        return self._inner.get(key)
+
+    def keys(self):
+        return self._inner.keys()
+
+    def prewarm(self, key, buckets, groups=None, **kw):
+        self.prewarmed.append(
+            (key, tuple(buckets), tuple(tuple(g) for g in (groups or ()))))
+
+
+def test_warmup_precompiles_hybrid_reachable_layouts():
+    """Under round_planner="hybrid", engine.warmup() must prewarm every
+    sub-mesh device group of every descending power-of-two partition into
+    2..|models| groups, for every model — replanning can land any model
+    on any group, and hybrid layouts draw from the same partition set as
+    the uneven splits."""
+    from repro.serving.vision import VisionServeEngine
+    reg = ModelRegistry(backend="xla")
+    net = zoo.tiny_net(resolution=16, width=8)
+    for variant in ("depthwise", "fuse_half", "fuse_full"):
+        reg.register(net, variant)
+    rec = _RecordingRegistry(reg)
+    engine = VisionServeEngine(
+        rec, cost_model=SystolicCostModel(n_devices=8,
+                                          round_planner="hybrid"),
+        buckets=BUCKETS, cross_model=True)
+    engine.warmup()
+    warmed_by_model = {key: set(gs) for key, _, gs in rec.prewarmed}
+    assert set(warmed_by_model) == set(reg.keys())
+    for k in (2, 3):
+        for sizes in power_of_two_partitions(8, k):
+            for grp in device_groups_sized(rec.devices, sizes):
+                if len(grp) < 8:          # full mesh is warm by default
+                    for key in reg.keys():
+                        assert grp in warmed_by_model[key], (sizes, grp)
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
 # Variance tracking + quantile admission.
 # ---------------------------------------------------------------------------
 

@@ -7,7 +7,9 @@ latency.  Covers the executor contracts: bounded in-flight depth, in-order
 per-request completion, SLO rejection under backlog, graceful shutdown with
 in-flight batches, the flush drain-intent bypass of the coalescing window,
 the request-level (not batch-level) latency accounting fix, cross-model
-round co-scheduling, and calibration-drift invalidation.
+round co-scheduling, mid-flight replanning (idle-group backfill + the
+partial-observation calibration quarantine), and calibration-drift
+invalidation.
 """
 import threading
 import time
@@ -18,7 +20,7 @@ import pytest
 from repro.serving.vision import (BucketPlan, LatencyCalibrator,
                                   ModelRegistry, RoundPart, RoundPlan,
                                   ServeMetrics, SystolicCostModel,
-                                  VisionServeEngine)
+                                  VisionRequest, VisionServeEngine)
 from repro.vision import zoo
 
 
@@ -497,6 +499,223 @@ def test_round_engine_drains_on_close():
     engine.close()                        # drain=True default
     for rid in rids:
         assert engine.future(rid).result(timeout=1).status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight replanning.  Eligibility is driven entirely by the round
+# plan's predicted per-group sums (group_ms) and the planning quantum, so
+# the mechanics are testable deterministically by driving the scheduler
+# and device stages directly — no thread interleaving involved.
+# ---------------------------------------------------------------------------
+
+class StubReplanCostModel(StubCostModel):
+    """Two fixed device groups: model 'a' (10ms batches) lands on group 0,
+    everything else (100ms) on group 1 — a co-scheduled round is predicted
+    to leave group 0 idle for 90ms, nine planning quanta."""
+
+    n_devices = 2
+
+    def __init__(self):
+        super().__init__()
+        self.partials = []
+
+    def _model_ms(self, model):
+        return 10.0 if model.key == "a" else 100.0
+
+    def plan_bucket(self, model, queued, buckets, group_size=None,
+                    quantile=None):
+        b = self._bucket(queued, buckets)
+        return BucketPlan(b, min(queued, b), self._model_ms(model))
+
+    def plan_round(self, models, buckets):
+        parts, group_ms = [], [0.0, 0.0]
+        for m, d in models:
+            grp = 0 if m.key == "a" else 1
+            plan = self.plan_bucket(m, d, buckets)
+            parts.append(RoundPart(m.key, plan, grp))
+            group_ms[grp] += plan.predicted_ms
+        return RoundPlan(parts, 2, 2, max(group_ms), group_sizes=[1, 1],
+                         group_ms=group_ms)
+
+    def drain_rounds_ms(self, models, buckets):
+        return sum(self.drain_ms(m, d, buckets) for m, d in models)
+
+    def observe(self, model, bucket, measured_ms, n_devices=1,
+                partial=False):
+        (self.partials if partial else self.observed).append(
+            (model.key, bucket, measured_ms))
+        return None
+
+
+def _replan_engine(reg, **kw):
+    return VisionServeEngine(reg, cost_model=StubReplanCostModel(),
+                             buckets=(1,), clock=FakeClock(),
+                             cross_model=True, replan=True, **kw)
+
+
+def _drive_round(engine, reg, keys):
+    """Push ``keys`` requests directly, form one round, and dispatch its
+    scheduled parts — the deterministic equivalent of the scheduler +
+    device stages, leaving replanning to the caller."""
+    clock = engine._clock
+    for i, key in enumerate(keys):
+        engine._queue.push(VisionRequest(i, key, _img(i), clock()))
+    engine._depth_sem.acquire()
+    rnd = engine._form_round()
+    assert rnd is not None
+    t0 = clock()
+    outs = [(p, reg.apply(p.batch.model, p.batch.images), clock())
+            for p in rnd.parts]
+    return rnd, outs, t0
+
+
+def test_replan_backfills_idle_group_with_warm_batches():
+    """Round 1 co-schedules a (10ms, group 0) and b (100ms, group 1);
+    group 0 is predicted to idle 90ms >= the 10ms quantum, so both queued
+    'a' requests left behind are backfilled onto group 0 inside the same
+    round, and the completer fans all four results under one slot."""
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _replan_engine(reg)
+    cm = engine.cost_model
+    rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "a", "a"])
+    assert sorted(p.batch.model for p in rnd.parts) == ["a", "b"]
+    assert engine._queue.pending() == 2          # two 'a's still queued
+    engine._replan_round(rnd, outs)
+    assert engine._queue.pending() == 0          # both backfilled
+    extra = [prep for prep, _, _ in outs if prep.replanned]
+    assert len(extra) == 2
+    assert all(p.batch.model == "a" for p in extra)
+    snap = engine.metrics.snapshot()
+    assert snap["replans"] == 2
+    assert snap["replan_idle_recovered_ms"] == pytest.approx(20.0)
+    engine._complete_round(rnd, outs, t0, None)
+    res = {r.rid: r for r in engine._results.values()}
+    assert sorted(res) == [0, 1, 2, 3]
+    assert all(r.status == "ok" for r in res.values())
+    for rid in (2, 3):                           # own logits fanned back
+        assert res[rid].logits[0] == pytest.approx(float(rid))
+    # calibration: scheduled parts observed normally, backfills partial
+    assert sorted(k for k, _, _ in cm.observed) == ["a", "b"]
+    assert [k for k, _, _ in cm.partials] == ["a", "a"]
+    engine.close()
+
+
+def test_replan_only_dispatches_batches_that_fit_the_idle_window():
+    """The only queued work (a 100ms 'b' batch) exceeds group 0's 90ms
+    predicted idle: dispatching it would push the round past its predicted
+    end, so the replanner must leave it queued."""
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _replan_engine(reg)
+    rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "b"])
+    assert engine._queue.pending() == 1
+    engine._replan_round(rnd, outs)
+    assert engine._queue.pending() == 1          # still queued for round 2
+    assert len(outs) == 2
+    assert engine.metrics.snapshot()["replans"] == 0
+    engine._complete_round(rnd, outs, t0, None)
+    engine.close(drain=False)
+
+
+class Stub3GroupCostModel(StubReplanCostModel):
+    """Three singleton groups: a (10ms) -> g0, c (40ms) -> g1, b (100ms)
+    -> g2 — the round leaves g0 idle 90ms and g1 idle 60ms."""
+
+    n_devices = 3
+    _GROUPS = {"a": 0, "c": 1, "b": 2}
+
+    def _model_ms(self, model):
+        return {"a": 10.0, "c": 40.0, "b": 100.0}[model.key]
+
+    def plan_round(self, models, buckets):
+        parts, group_ms = [], [0.0, 0.0, 0.0]
+        for m, d in models:
+            grp = self._GROUPS[m.key]
+            plan = self.plan_bucket(m, d, buckets)
+            parts.append(RoundPart(m.key, plan, grp))
+            group_ms[grp] += plan.predicted_ms
+        return RoundPlan(parts, 3, 3, max(group_ms),
+                         group_sizes=[1, 1, 1], group_ms=group_ms)
+
+
+def test_replan_falls_through_to_the_next_idle_group():
+    """The most-idle group's devices are cold: the replanner must mark it
+    exhausted and backfill the NEXT idle group instead of giving up."""
+    class ColdGroup0Registry(StubRegistry):
+        devices = (0, 1, 2)
+
+        def is_compiled(self, key, bucket, devices=None):
+            return devices != (0,)
+
+    reg = ColdGroup0Registry(keys=("a", "c", "b"))
+    engine = VisionServeEngine(reg, cost_model=Stub3GroupCostModel(),
+                               buckets=(1,), clock=FakeClock(),
+                               cross_model=True, replan=True)
+    rnd, outs, t0 = _drive_round(engine, reg, ["a", "c", "b", "a"])
+    assert engine._queue.pending() == 1          # the extra 'a'
+    engine._replan_round(rnd, outs)
+    extra = [p for p, _, _ in outs if p.replanned]
+    assert len(extra) == 1
+    assert extra[0].devices == (1,)              # backfilled g1, not cold g0
+    assert engine._queue.pending() == 0
+    assert engine.metrics.snapshot()["replans"] == 1
+    engine._complete_round(rnd, outs, t0, None)
+    engine.close()
+
+
+def test_replan_skips_cold_jit_entries():
+    """A registry that reports every entry cold: replanning must never
+    dispatch (a backfill that compiles under traffic would cost more than
+    the idle it recovers)."""
+    class ColdRegistry(StubRegistry):
+        def is_compiled(self, key, bucket, devices=None):
+            return False
+
+    reg = ColdRegistry(keys=("a", "b"))
+    engine = _replan_engine(reg)
+    rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "a"])
+    engine._replan_round(rnd, outs)
+    assert engine._queue.pending() == 1
+    assert engine.metrics.snapshot()["replans"] == 0
+    engine._complete_round(rnd, outs, t0, None)
+    engine.close(drain=False)
+
+
+def test_replan_end_to_end_through_the_pipeline():
+    """Threaded integration: whatever the scheduler/replanner
+    interleaving, every request completes with its own logits and the
+    metrics stay consistent."""
+    reg = StubRegistry(keys=("a", "b"))
+    engine = _replan_engine(reg, max_in_flight=1)
+    keys = ["a", "b", "a", "a", "b", "a", "a", "b"]
+    rids = [engine.submit(k, _img(i)) for i, k in enumerate(keys)]
+    results = {r.rid: r for r in engine.flush()}
+    for i, rid in enumerate(rids):
+        assert results[rid].status == "ok"
+        assert results[rid].logits[0] == pytest.approx(float(i))
+    snap = engine.metrics.snapshot()
+    assert snap["completed"] == len(keys)
+    assert snap["replans"] >= 0                  # interleaving-dependent
+    engine.close()
+
+
+def test_calibrator_ignores_partial_observations():
+    """Partial-round (replan backfill) observations are monitored but
+    never folded into the fits — neither to form one nor to move one."""
+    cal = LatencyCalibrator(min_samples=2)
+    for _ in range(5):
+        assert cal.observe("m", 1, 2.0, 20.0, partial=True) is None
+    assert cal.calibrated_ms("m", 1, 2.0) is None    # no fit formed
+    assert "m" not in cal.snapshot()                 # no phantom n=0 cells
+    for _ in range(2):
+        cal.observe("m", 1, 2.0, 20.0)
+    assert cal.calibrated_ms("m", 1, 2.0) == pytest.approx(20.0)
+    # after convergence: the residual is reported, the fit doesn't move
+    resid = cal.observe("m", 1, 2.0, 60.0, partial=True)
+    assert resid == pytest.approx(40.0)
+    assert cal.calibrated_ms("m", 1, 2.0) == pytest.approx(20.0)
+    snap = cal.snapshot()
+    assert snap["partial"]["n"] == 6
+    assert snap["m"]["buckets"]["1"]["n"] == 2       # partials not counted
 
 
 # ---------------------------------------------------------------------------
