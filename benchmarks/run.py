@@ -34,6 +34,7 @@ SUITES = {
     "roofline": roofline.run,
     "serve": serve_vision.run,
     "serve_sharded": serve_vision.run_sharded,
+    "serve_tenants": serve_vision.run_tenants,
 }
 
 

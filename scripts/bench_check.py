@@ -10,6 +10,8 @@ ratios:
 * ``serve``          — async/sync speedup (``sync us / async us``)
 * ``serve_sharded``  — sharded/sync speedup and adaptive/fifo round-planner
                        gain
+* ``serve_tenants``  — shed/noshed completed-interactive admission ratio
+                       (a count ratio, floor-only)
 
 Absolute us/request depends on the runner (container cores, CPU
 contention, thermal state) and would flake in CI; the *ratio* between two
@@ -57,6 +59,18 @@ RATIOS = [
     ("hybrid_vs_fifo", "serve_sharded",
      "serve_sharded.stream24.sharded_fifo.xla",
      "serve_sharded.stream24.sharded_hybrid.xla", 1.0, False),
+    # load shedding's contract is admission capacity: the shed engine
+    # must complete at least as many interactive requests as the noshed
+    # engine on the same tenant traces (the ratio is of request COUNTS,
+    # not timings).  Floor-only: the count depends on how calibrated
+    # admission prices the machine's measured latencies that run, so a
+    # baseline ratchet would turn runner drift into flakes.  Interactive
+    # p95 is deliberately unguarded — shedding admits exactly the
+    # marginal near-SLO requests noshed rejects, which legitimately
+    # raises the completed-set p95.
+    ("tenant_shed_admission", "serve_tenants",
+     "serve_tenants.interactive_ok.shed.xla",
+     "serve_tenants.interactive_ok.noshed.xla", 1.0, False),
 ]
 
 

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Serve launcher wrapper: one place that sets the process environment the
+# vision-serving entry point needs, then execs the launcher module.
+#
+#   scripts/serve.sh --mesh 8 --requests 32 [any serve_vision flags...]
+#
+# The virtual-device count for CPU runs is taken from --mesh (jax reads
+# XLA_FLAGS once at startup, so it must be exported before python imports
+# jax; repro.launch.env is the canonical merge, used here via -c so the
+# launcher process itself starts with the right environment).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# pull the mesh size out of the args (0 = single device, no flag needed)
+MESH=0
+args=("$@")
+for ((i = 0; i < ${#args[@]}; i++)); do
+    if [[ "${args[$i]}" == "--mesh" && $((i + 1)) -lt ${#args[@]} ]]; then
+        MESH="${args[$((i + 1))]}"
+    fi
+done
+
+eval "$(python - "$MESH" <<'PY'
+import os
+import shlex
+import sys
+
+from repro.launch.env import configure
+
+keys = ("XLA_FLAGS", "TF_CPP_MIN_LOG_LEVEL", "JAX_PLATFORMS",
+        "JAX_PLATFORM_NAME", "LIBTPU_INIT_ARGS")
+seed = {k: os.environ[k] for k in keys if k in os.environ}
+env = configure(int(sys.argv[1]), env=seed)
+for k, v in env.items():
+    print(f"export {k}={shlex.quote(v)}")
+PY
+)"
+
+exec python -m repro.launch.serve_vision "$@"

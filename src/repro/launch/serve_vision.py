@@ -81,9 +81,28 @@ def main(argv=None):
                          " structural even split")
     ap.add_argument("--replan", action="store_true",
                     help="mid-flight replanning: backfill device groups"
-                         " predicted to finish early with the next warm"
-                         " FIFO-eligible batch (recovered idle-ms and"
-                         " replan counts land in the metrics snapshot)")
+                         " OBSERVED complete (readiness probe) with the"
+                         " next warm FIFO-eligible batch (recovered"
+                         " idle-ms, replan counts, probe polls, and"
+                         " per-group completion error land in the metrics"
+                         " snapshot)")
+    ap.add_argument("--probe-interval-ms", type=float, default=0.2,
+                    help="pause between readiness-probe polls while the"
+                         " replanner watches a dispatched round")
+    ap.add_argument("--shed", action="store_true",
+                    help="tenancy: an SLO'd request that would be rejected"
+                         " first sheds queued work of strictly lower"
+                         " priority (newest first; shed requests resolve"
+                         " with status 'shed')")
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME:PATTERN:RATE_RPS:CLASS[:SLO_MS]",
+                    help="replace the mixed burst with multi-tenant traffic"
+                         " (repeatable).  PATTERN is one of poisson/bursty/"
+                         "diurnal/heavy_tail, CLASS one of interactive/"
+                         "batch, SLO_MS optional.  --requests becomes"
+                         " per-tenant; the snapshot gains per-class and"
+                         " per-tenant latency ledgers plus the fairness"
+                         " index")
     ap.add_argument("--sync", action="store_true",
                     help="drain synchronously on the caller's thread instead"
                          " of the pipelined executor")
@@ -100,9 +119,28 @@ def main(argv=None):
 
     import numpy as np
 
-    from repro.serving.vision import (LatencyCalibrator, ModelRegistry,
-                                      SystolicCostModel, VisionServeEngine,
-                                      submit_mixed_burst)
+    from repro.serving.vision import (ARRIVAL_PATTERNS, LatencyCalibrator,
+                                      ModelRegistry, SLO_CLASSES,
+                                      SystolicCostModel, TenantSpec,
+                                      VisionServeEngine, make_tenant_trace,
+                                      submit_mixed_burst, submit_trace)
+
+    tenants = []
+    for entry in args.tenant or []:
+        fields = entry.split(":")
+        if not 4 <= len(fields) <= 5:
+            raise SystemExit(f"--tenant {entry!r} is malformed; expected "
+                             f"NAME:PATTERN:RATE_RPS:CLASS[:SLO_MS]")
+        name, pattern, rate, cls = fields[:4]
+        if pattern not in ARRIVAL_PATTERNS:
+            raise SystemExit(f"--tenant pattern {pattern!r} not in "
+                             f"{ARRIVAL_PATTERNS}")
+        if cls not in SLO_CLASSES:
+            raise SystemExit(f"--tenant class {cls!r} not in "
+                             f"{tuple(SLO_CLASSES)}")
+        tenants.append(TenantSpec(
+            name, pattern=pattern, rate_rps=float(rate), slo_class=cls,
+            slo_ms=float(fields[4]) if len(fields) == 5 else None))
 
     mesh = None
     if args.mesh:
@@ -138,7 +176,8 @@ def main(argv=None):
             round_planner=args.round_planner,
             admission_quantile=args.admission_quantile),
         buckets=args.buckets, pipelined=not args.sync,
-        max_in_flight=args.max_in_flight, replan=args.replan)
+        max_in_flight=args.max_in_flight, replan=args.replan,
+        probe_interval_ms=args.probe_interval_ms, shed=args.shed)
     engine.warmup()
 
     for i in range(args.warm_bursts):
@@ -149,15 +188,28 @@ def main(argv=None):
         # describe only the measured burst
         engine.metrics.reset()
 
-    submit_mixed_burst(engine, args.requests, seed=args.seed,
-                       slo_ms=args.slo_ms)
+    if tenants:
+        trace = make_tenant_trace(registry, tenants, args.requests,
+                                  seed=args.seed)
+        submit_trace(engine, trace)
+    else:
+        submit_mixed_burst(engine, args.requests, seed=args.seed,
+                           slo_ms=args.slo_ms)
     results = engine.flush()
     for r in results:
         top1 = int(np.argmax(r.logits)) if r.logits is not None else -1
         unit = "cal-ms" if r.calibrated else "acc-ms"
+        who = f" [{r.tenant}/{r.slo_class}]" if r.tenant else ""
         print(f"req {r.rid:3d} {r.model:28s} {r.status:8s} top1={top1:4d} "
               f"bucket={r.bucket} predicted={r.predicted_ms:8.3f}{unit} "
-              f"measured_run={r.run_ms:8.2f}ms e2e={r.e2e_ms:8.2f}ms")
+              f"measured_run={r.run_ms:8.2f}ms e2e={r.e2e_ms:8.2f}ms{who}")
+    if tenants:
+        snap_t = engine.metrics.snapshot()
+        for cls, stat in sorted(snap_t["class_e2e"].items()):
+            print(f"class {cls:12s} n={stat['count']:4d} "
+                  f"p50={stat['p50_ms']:8.2f}ms p95={stat['p95_ms']:8.2f}ms")
+        print(f"shed={snap_t['shed']} "
+              f"fairness={snap_t['fairness_index']:.3f}")
     snap = engine.metrics.snapshot()
     snap["calibration"] = calibrator.snapshot()
     snap["mode"] = "sync" if args.sync else "pipelined"
@@ -167,6 +219,13 @@ def main(argv=None):
     # cross-model round scheduler, so --replan without --mesh stays off
     snap["replan"] = bool(engine.replan)
     snap["admission_quantile"] = args.admission_quantile
+    snap["shed_enabled"] = bool(args.shed)
+    if tenants:
+        snap["tenants"] = {t.name: {"pattern": t.pattern,
+                                    "rate_rps": t.rate_rps,
+                                    "slo_class": t.slo_class,
+                                    "slo_ms": t.slo_ms}
+                           for t in tenants}
     print(json.dumps(snap, indent=2, sort_keys=True))
     if args.json_path:
         with open(args.json_path, "w") as f:

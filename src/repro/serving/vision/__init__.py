@@ -21,23 +21,37 @@ from repro.serving.vision.costmodel import (BucketPlan, RoundPart, RoundPlan,
                                             SystolicCostModel,
                                             power_of_two_partitions,
                                             round_groups, uneven_sizes)
-from repro.serving.vision.engine import (VisionFuture, VisionResult,
-                                         VisionServeEngine)
+from repro.serving.vision.engine import (ReadinessProbe, VisionFuture,
+                                         VisionResult, VisionServeEngine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
                                            default_model_key, device_groups,
                                            device_groups_sized)
-from repro.serving.vision.traffic import (make_mixed_burst, stream_items,
+from repro.serving.vision.sketch import (DEFAULT_QUANTILES, P2Quantile,
+                                         QuantileSketch)
+from repro.serving.vision.tenancy import (DEFAULT_CLASS, SLO_CLASSES,
+                                          SLOClass, class_priority,
+                                          class_weight, jain_fairness,
+                                          slo_class)
+from repro.serving.vision.traffic import (ARRIVAL_PATTERNS, TenantSpec,
+                                          make_mixed_burst,
+                                          make_tenant_trace, stream_items,
                                           stream_mixed_burst,
-                                          submit_mixed_burst)
+                                          submit_mixed_burst, submit_trace)
 
 __all__ = [
-    "Batch", "BucketPlan", "DEFAULT_BUCKETS", "LatencyCalibrator",
-    "LatencyStat", "ModelRegistry", "RegisteredModel", "RequestQueue",
-    "RoundPart", "RoundPlan", "ServeMetrics", "SystolicCostModel",
+    "ARRIVAL_PATTERNS", "Batch", "BucketPlan", "DEFAULT_BUCKETS",
+    "DEFAULT_CLASS", "DEFAULT_QUANTILES", "LatencyCalibrator",
+    "LatencyStat", "ModelRegistry", "P2Quantile", "QuantileSketch",
+    "ReadinessProbe", "RegisteredModel", "RequestQueue",
+    "RoundPart", "RoundPlan", "SLOClass", "SLO_CLASSES", "ServeMetrics",
+    "SystolicCostModel", "TenantSpec",
     "VisionFuture", "VisionRequest", "VisionResult", "VisionServeEngine",
+    "class_priority", "class_weight",
     "default_model_key", "device_groups", "device_groups_sized",
-    "fit_image", "form_batch", "form_round", "make_mixed_burst",
-    "percentile", "power_of_two_partitions", "round_groups", "stream_items",
-    "stream_mixed_burst", "submit_mixed_burst", "uneven_sizes", "z_score",
+    "fit_image", "form_batch", "form_round", "jain_fairness",
+    "make_mixed_burst", "make_tenant_trace",
+    "percentile", "power_of_two_partitions", "round_groups", "slo_class",
+    "stream_items", "stream_mixed_burst", "submit_mixed_burst",
+    "submit_trace", "uneven_sizes", "z_score",
 ]

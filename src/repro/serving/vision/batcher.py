@@ -62,6 +62,11 @@ class VisionRequest:
     image: np.ndarray            # (H, W, C), any H/W
     t_submit: float
     slo_ms: Optional[float] = None
+    # tenancy (see tenancy.py): the SLO class orders shedding and weighs
+    # planner scores; the tenant tag only feeds per-tenant metrics and
+    # fairness — neither changes batch formation or FIFO order
+    slo_class: str = "batch"
+    tenant: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -136,6 +141,50 @@ class RequestQueue:
             for model, n in wants:
                 q = self._queues.get(model, ())
                 out.append([q.popleft() for _ in range(min(n, len(q)))])
+            return out
+
+    # -- tenancy ------------------------------------------------------------
+    def shed_lowest(self, max_priority: int,
+                    priority_of) -> Optional[VisionRequest]:
+        """Remove and return the NEWEST queued request of the lowest
+        priority class strictly below ``max_priority`` (None when every
+        queued request is at or above it).  ``priority_of`` maps a class
+        name to its priority (kept a callable so this module stays free of
+        tenancy imports).
+
+        Newest-of-lowest is the shed order that hurts least: the lowest
+        class gives way first, and within it the request that has waited
+        least loses its slot (the oldest is closest to being served —
+        shedding it wastes the most queueing investment)."""
+        with self._lock:
+            victim: Optional[Tuple[int, float, str, int]] = None
+            for model, q in self._queues.items():
+                for i, req in enumerate(q):
+                    pr = priority_of(req.slo_class)
+                    if pr >= max_priority:
+                        continue
+                    cand = (pr, -req.t_submit, model, i)
+                    if victim is None or cand < victim:
+                        victim = cand
+            if victim is None:
+                return None
+            _, _, model, i = victim
+            q = self._queues[model]
+            req = q[i]
+            del q[i]
+            return req
+
+    def class_weights(self, weight_of) -> Dict[str, float]:
+        """Per-model mean SLO-class weight of the queued requests — the
+        round planner's exchange rate for ms-per-served-request scoring
+        (``weight_of`` maps a class name to its weight).  Models with no
+        queued work are absent."""
+        with self._lock:
+            out: Dict[str, float] = {}
+            for model, q in self._queues.items():
+                if q:
+                    out[model] = sum(weight_of(r.slo_class)
+                                     for r in q) / len(q)
             return out
 
 

@@ -19,12 +19,17 @@ storage)::
 
 Tail awareness: every fit also tracks ``sum(wall^2)``, from which the
 residual variance of the through-origin fit falls out analytically
-(``SSE = sum_yy - sum_xy^2 / sum_xx``).  ``calibrated_ms(..., quantile=q)``
-quotes ``scale * accel + z_q * resid_std`` — a Gaussian latency quantile —
-so SLO admission can reason about the tail instead of the mean (the paper's
-pitch is tail latency and utilization on systolic arrays, and a mean-based
-admission happily admits requests the p95 will blow).  ``quantile=None``
-(or 0.5) keeps the mean estimate.
+(``SSE = sum_yy - sum_xy^2 / sum_xx``), *and* a streaming P² quantile
+sketch of its residuals (``sketch.py``).  ``calibrated_ms(..., quantile=q)``
+quotes ``scale * accel + resid_quantile(q)`` straight from the sketch once
+it has enough observations; before that it falls back to the closed-form
+Gaussian term ``z_q * resid_std``.  The distinction matters because
+serving wall-ms is heavy-tailed (GC pauses, shared-core throttling,
+co-scheduled rounds), and a Gaussian p95 can sit a factor of 2-4 away from
+the observed one — over- or under-pricing SLO admission depending on the
+skew direction — while the sketch reads the p95 off the residual stream
+directly.  ``quantile=None`` (or 0.5 under the Gaussian fallback) keeps
+the mean estimate.
 
 The accelerator prediction for one cell is a constant, so the
 through-origin fit degenerates gracefully to the ratio-of-means estimator —
@@ -62,6 +67,8 @@ import threading
 from statistics import NormalDist
 from typing import Dict, List, Optional, Tuple
 
+from .sketch import QuantileSketch
+
 
 @functools.lru_cache(maxsize=64)
 def z_score(quantile: float) -> float:
@@ -83,6 +90,10 @@ class _Fit:
     sum_xx: float = 0.0
     sum_yy: float = 0.0
     sum_abs_resid: float = 0.0     # |measured - fit-at-observation-time|
+    # streaming quantiles of the signed residuals (measured minus this
+    # fit's own pre-update prediction); answers tail quotes directly once
+    # it has ``min_count`` observations, Gaussian z*resid_std before that
+    sketch: QuantileSketch = dataclasses.field(default_factory=QuantileSketch)
 
     def add(self, x: float, y: float) -> None:
         self.n += 1
@@ -111,32 +122,46 @@ class _Fit:
 
     def quote(self, accel_ms: float,
               quantile: Optional[float] = None) -> Optional[float]:
-        """Wall-ms estimate at ``quantile`` (None -> mean fit)."""
+        """Wall-ms estimate at ``quantile`` (None -> mean fit).  The tail
+        term comes from the residual sketch when it is active (observed
+        quantile, honest under heavy tails), else the Gaussian
+        ``z * resid_std`` closed form (warm-up)."""
         scale = self.scale
         if scale is None:
             return None
         ms = scale * accel_ms
         if quantile is not None:
-            ms += z_score(quantile) * self.resid_std
+            tail = (self.sketch.quantile(quantile)
+                    if self.sketch.active else None)
+            if tail is None:
+                tail = z_score(quantile) * self.resid_std
+            ms += tail
         return ms
 
     def summary(self) -> Dict[str, float]:
-        return {"n": self.n, "scale": self.scale if self.scale else 0.0,
-                "resid_var_ms2": self.resid_var,
-                "resid_std_ms": self.resid_std,
-                "mean_abs_resid_ms": (self.sum_abs_resid / self.n
-                                      if self.n else 0.0)}
+        out = {"n": self.n, "scale": self.scale if self.scale else 0.0,
+               "resid_var_ms2": self.resid_var,
+               "resid_std_ms": self.resid_std,
+               "mean_abs_resid_ms": (self.sum_abs_resid / self.n
+                                     if self.n else 0.0)}
+        if self.sketch.active:
+            for label, v in self.sketch.summary().items():
+                if label != "n":
+                    out[f"resid_{label}_ms"] = v
+        return out
 
 
 def _combined(fits: List[_Fit]) -> _Fit:
     """Pool several through-origin fits into one (sums are sufficient
-    statistics, so pooling is exact for the combined sample)."""
+    statistics, so pooling is exact for the combined sample; the residual
+    sketches merge approximately — see ``sketch.py``)."""
     tot = _Fit()
     for f in fits:
         tot.n += f.n
         tot.sum_xy += f.sum_xy
         tot.sum_xx += f.sum_xx
         tot.sum_yy += f.sum_yy
+    tot.sketch.merge_from(f.sketch for f in fits if f.sketch.count)
     return tot
 
 
@@ -247,6 +272,13 @@ class LatencyCalibrator:
                 pooled = self._pooled.setdefault((key, n_devices), _Fit())
             if resid is not None:
                 fit.sum_abs_resid += abs(resid)
+            # each converged fit sketches its OWN pre-update residual
+            # (wall minus its own scale's prediction), so a fit's quantile
+            # quotes describe the errors that fit actually makes —
+            # a drift drop discards the sketches with the fits
+            for f in (cell, pooled):
+                if f.n >= self.min_samples and f.scale is not None:
+                    f.sketch.add(wall_ms - f.scale * accel_ms)
             cell.add(accel_ms, wall_ms)
             pooled.add(accel_ms, wall_ms)
             return resid

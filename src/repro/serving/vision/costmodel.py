@@ -306,7 +306,8 @@ class SystolicCostModel:
 
     def plan_round(self, models: Sequence[Tuple[RegisteredModel, int]],
                    buckets: Sequence[int],
-                   quantile: Optional[float] = None) -> RoundPlan:
+                   quantile: Optional[float] = None,
+                   weights: Optional[Dict[str, float]] = None) -> RoundPlan:
         """Compose one cross-model device round from ``models`` — FIFO-
         ordered (model, queued depth) pairs, every entry with depth >= 1.
 
@@ -348,7 +349,15 @@ class SystolicCostModel:
         the scores are calibrated estimates with noise, and the structural
         split is the warm, predictable default; ties and marginal wins
         keep it.  Every candidate's per-request score is recorded in
-        ``RoundPlan.candidates``."""
+        ``RoundPlan.candidates``.
+
+        ``weights`` (model key -> mean SLO-class weight of its queued
+        requests, see ``tenancy.py``) turns the denominator into a
+        *weighted* served count: an interactive request counts several
+        batch ones, so under contention the composition that serves
+        interactive-heavy queues wins the round even when its raw
+        request count is lower.  None (or all-equal weights) reduces to
+        plain ms-per-request — pre-tenancy behavior exactly."""
         assert models
         strategies = [("even", self._even_assignment(len(models)))]
         if self.round_planner in ("adaptive", "hybrid"):
@@ -371,7 +380,9 @@ class SystolicCostModel:
             plan = self._score_assignment(
                 models, buckets, group_of, sizes, name,
                 quantile=self._strategy_quantile(name, quantile))
-            score = plan.predicted_ms / max(1, plan.served)
+            served = plan.served if not weights else sum(
+                p.plan.served * weights.get(p.key, 1.0) for p in plan.parts)
+            score = plan.predicted_ms / max(1, served)
             scores[name] = score
             if best is None:
                 best, best_score = plan, score

@@ -54,16 +54,25 @@ Request lifecycle:
   quantity that matters ("when is my batch done"), and it over- rather than
   under-estimates shared-group parts.
 
-  mid-flight replanning (``replan=True``) — a round costs its slowest
-  group, so every other group is predicted to idle from its own end until
-  the round's.  Right after dispatching a round, the device thread
-  backfills any group predicted to finish >= one planning quantum early
-  with the next FIFO-eligible queued batch whose jit entry is already warm
-  and whose predicted latency fits the idle window (``_replan_round``).
-  Backfilled parts ride the round's pipeline slot and fan back through the
-  completer like scheduled parts, but their latency observations are
-  flagged ``partial`` so calibration fits never learn the queueing time a
-  back-to-back dispatch carries.
+  reactive mid-flight replanning (``replan=True``) — a round costs its
+  slowest group, so every other group idles from its own completion until
+  the round's end.  Right after dispatching a round, the device thread
+  polls each group's outputs through a non-blocking ``ReadinessProbe``
+  (``jax.Array.is_ready``; tests inject fake probes) and backfills any
+  group OBSERVED complete — with >= one planning quantum left before the
+  round's predicted end — with the next FIFO-eligible queued batch whose
+  jit entry is already warm and whose predicted latency fits the remaining
+  window (``_replan_round``).  Observed completions also feed per-group
+  |predicted - actual| metrics.  Backfilled parts ride the round's
+  pipeline slot and fan back through the completer like scheduled parts,
+  but their latency observations are flagged ``partial`` so calibration
+  fits never learn the queueing time a back-to-back dispatch carries.
+
+  tenancy (``shed=True`` + per-request ``slo_class``/``tenant``) — see
+  ``tenancy.py``: SLO classes order load shedding at admission time
+  (lowest priority, newest first, status "shed") and weigh the round
+  planner's ms-per-served-request scores; per-class/per-tenant latency
+  ledgers and a fairness index land in ``metrics.py``.
 
   flush()
       -> waits for the pipeline to drain (or, with ``pipelined=False``,
@@ -83,10 +92,11 @@ either case — composition only moves batch boundaries.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import numpy as np
@@ -99,13 +109,41 @@ from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
 from repro.serving.vision.metrics import ServeMetrics
 from repro.serving.vision.registry import (ModelRegistry, device_groups,
                                            device_groups_sized)
+from repro.serving.vision.tenancy import class_priority, class_weight
+from repro.serving.vision.tenancy import slo_class as resolve_slo_class
+
+
+class ReadinessProbe:
+    """Non-blocking completion check for dispatched device outputs.
+
+    ``poll(out)`` answers "is this output ready?" without blocking:
+    ``jax.Array.is_ready()`` when the output exposes it, True otherwise
+    (host arrays from duck-typed stub registries are ready by
+    construction, and a ``_BatchError`` already failed).  ``wait(ms)``
+    is the inter-poll pause.  Both are overridable, which is the whole
+    point: tests inject scripted or fake-clock-keyed probes and drive
+    the device thread's reactive loop deterministically without touching
+    a device."""
+
+    def poll(self, out) -> bool:
+        probe = getattr(out, "is_ready", None)
+        if probe is None:
+            return True
+        try:
+            return bool(probe())
+        except Exception:
+            return True
+
+    def wait(self, interval_ms: float) -> None:
+        if interval_ms > 0.0:
+            time.sleep(interval_ms / 1e3)
 
 
 @dataclasses.dataclass
 class VisionResult:
     rid: int
     model: str
-    status: str                       # "ok" | "rejected" | "cancelled" | "error"
+    status: str          # "ok" | "rejected" | "cancelled" | "error" | "shed"
     logits: Optional[np.ndarray]      # (num_classes,) for "ok"
     predicted_ms: float               # cost-model estimate at decision time
     queue_ms: float = 0.0
@@ -116,6 +154,8 @@ class VisionResult:
     calibrated: bool = False          # predicted_ms was calibrated wall-ms
     n_devices: int = 1                # devices the batch was sharded over
     error: Optional[str] = None       # exception text for status "error"
+    slo_class: str = "batch"          # tenancy (see tenancy.py)
+    tenant: Optional[str] = None
 
 
 class VisionFuture:
@@ -151,6 +191,7 @@ class _Prepared:
     plan: BucketPlan
     devices: Optional[tuple] = None   # device group (round scheduler only)
     replanned: bool = False           # mid-flight backfill, not a round part
+    group: Optional[int] = None       # round group index (readiness probing)
 
 
 @dataclasses.dataclass
@@ -187,7 +228,10 @@ class VisionServeEngine:
                  batch_window_ms: float = 0.0,
                  cross_model: Optional[bool] = None,
                  replan: bool = False,
-                 replan_quantum_ms: Optional[float] = None):
+                 replan_quantum_ms: Optional[float] = None,
+                 probe: Optional[ReadinessProbe] = None,
+                 probe_interval_ms: float = 0.2,
+                 shed: bool = False):
         self.registry = registry
         # mesh comes in through the registry (it owns placement); the
         # engine owns scheduling over its device list
@@ -226,6 +270,16 @@ class VisionServeEngine:
         # granularity the planner itself quantizes work at.
         self.replan = bool(replan) and self.cross_model
         self.replan_quantum_ms = replan_quantum_ms
+        # reactive completion: the device thread polls dispatched groups
+        # through the probe (non-blocking jax.Array.is_ready) so backfill
+        # decisions and per-group completion metrics key off OBSERVED
+        # completion, not plan-time predictions; tests inject fake probes
+        self._probe = probe if probe is not None else ReadinessProbe()
+        self.probe_interval_ms = max(0.0, float(probe_interval_ms))
+        # tenancy: shed lowest-priority queued work when an SLO'd request
+        # of a higher class would otherwise be rejected at admission
+        self._shed = bool(shed)
+        self._plan_weights_ok: Optional[bool] = None
         self._queue = RequestQueue()
         self._results: Dict[int, VisionResult] = {}
         self._futures: Dict[int, VisionFuture] = {}
@@ -251,40 +305,51 @@ class VisionServeEngine:
 
     # -- intake -------------------------------------------------------------
     def submit(self, model_key: str, image: np.ndarray,
-               slo_ms: Optional[float] = None) -> int:
+               slo_ms: Optional[float] = None, *,
+               slo_class: Optional[str] = None,
+               tenant: Optional[str] = None) -> int:
         """Enqueue one image; returns its request id (see ``future``).
 
         With an SLO, the request is subject to admission control: if the
         cost model predicts the queued + in-flight work ahead of it plus its
         own batch already blows the budget, it is rejected now (result
-        status "rejected")."""
+        status "rejected").
+
+        ``slo_class`` names the request's service class (see
+        ``tenancy.py``; default "batch", unknown names raise).  With the
+        engine's ``shed=True``, an SLO'd request that would be rejected
+        first sheds queued work of strictly lower priority — newest first
+        within the lowest class — re-checking admission after each
+        eviction; shed requests resolve with status "shed".  ``tenant``
+        tags the request for per-tenant metrics and the fairness index
+        only — it never affects scheduling."""
         if self._closing or self._closed:
             raise RuntimeError("engine is closed")
         model = self.registry.get(model_key)
+        cls = resolve_slo_class(slo_class)          # raises on unknown names
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
         self.metrics.on_submit()
         if slo_ms is not None:
-            extra = {}
-            if self.cross_model and self._devices \
-                    and hasattr(self.cost_model, "plan_round"):
-                # price this model's own drain on the device group the
-                # round planner would assign it right now — the full mesh
-                # would under-predict (and over-admit) whenever rounds
-                # split the mesh across active models
-                from repro.serving.vision.costmodel import round_groups
-                active = {m for m, _, _ in self._queue.snapshot()}
-                active.add(model_key)
-                ndev = len(self._devices)
-                extra["group_size"] = ndev // round_groups(len(active), ndev)
-            admitted, predicted = self.cost_model.admit(
-                model, slo_ms, self._queue.pending(model_key), self.buckets,
-                self._backlog_ms(model_key), **extra)
+            admitted, predicted = self._admit(model, model_key, slo_ms)
+            if not admitted and self._shed:
+                # evict strictly-lower-priority queued work until this
+                # request fits (or nothing lower remains); every eviction
+                # changes the backlog, so admission is re-priced each time
+                while not admitted:
+                    victim = self._queue.shed_lowest(cls.priority,
+                                                     class_priority)
+                    if victim is None:
+                        break
+                    self._resolve_shed(victim)
+                    admitted, predicted = self._admit(model, model_key,
+                                                      slo_ms)
             if not admitted:
                 self.metrics.on_reject()
                 res = VisionResult(rid, model_key, "rejected", None,
-                                   predicted)
+                                   predicted, slo_class=cls.name,
+                                   tenant=tenant)
                 fut = VisionFuture(rid)
                 fut._resolve(res)
                 with self._lock:
@@ -302,9 +367,42 @@ class VisionServeEngine:
             self._futures[rid] = VisionFuture(rid)
             self._queue.push(VisionRequest(rid, model_key,
                                            np.asarray(image),
-                                           self._clock(), slo_ms))
+                                           self._clock(), slo_ms,
+                                           slo_class=cls.name,
+                                           tenant=tenant))
             self._work_cv.notify_all()
         return rid
+
+    def _admit(self, model, model_key: str,
+               slo_ms: float) -> Tuple[bool, float]:
+        """One admission check against the CURRENT queue + in-flight state
+        (re-run after each shed eviction)."""
+        extra = {}
+        if self.cross_model and self._devices \
+                and hasattr(self.cost_model, "plan_round"):
+            # price this model's own drain on the device group the
+            # round planner would assign it right now — the full mesh
+            # would under-predict (and over-admit) whenever rounds
+            # split the mesh across active models
+            from repro.serving.vision.costmodel import round_groups
+            active = {m for m, _, _ in self._queue.snapshot()}
+            active.add(model_key)
+            ndev = len(self._devices)
+            extra["group_size"] = ndev // round_groups(len(active), ndev)
+        return self.cost_model.admit(
+            model, slo_ms, self._queue.pending(model_key), self.buckets,
+            self._backlog_ms(model_key), **extra)
+
+    def _resolve_shed(self, req: VisionRequest) -> None:
+        """Resolve an evicted queued request with status "shed"."""
+        res = VisionResult(req.rid, req.model, "shed", None, 0.0,
+                           slo_class=req.slo_class, tenant=req.tenant)
+        self.metrics.on_shed(req.slo_class)
+        with self._lock:
+            self._results[req.rid] = res
+            fut = self._futures.get(req.rid)
+        if fut is not None:
+            fut._resolve(res)
 
     def future(self, rid: int) -> VisionFuture:
         """The completion future for a submitted request id."""
@@ -460,7 +558,15 @@ class VisionServeEngine:
         models = [(self.registry.get(m), d) for m, d, _ in entries]
         t_h0 = self._clock()
         try:
-            rplan = self.cost_model.plan_round(models, self.buckets)
+            plan_kw = {}
+            weights = self._queue.class_weights(class_weight)
+            if any(w != 1.0 for w in weights.values()) \
+                    and self._planner_takes_weights():
+                # mixed service classes queued: let the planner weigh
+                # ms-per-served-request by class priority (tenancy.py)
+                plan_kw["weights"] = weights
+            rplan = self.cost_model.plan_round(models, self.buckets,
+                                               **plan_kw)
             # resolved before any request is popped: a plan whose group
             # count can't partition the device list must fail HERE, where
             # containment below still owns every queued request
@@ -503,7 +609,8 @@ class VisionServeEngine:
                 self._fail(reqs, part.plan, batch, in_flight=False)
                 continue
             parts.append(_Prepared(batch, part.plan,
-                                   devices=groups[part.group]))
+                                   devices=groups[part.group],
+                                   group=part.group))
         self.metrics.on_stage("host", self._clock() - t_h0)
         if not parts:
             self._round_done(rplan.predicted_ms)
@@ -516,6 +623,17 @@ class VisionServeEngine:
                       groups=list(groups),
                       group_ms=getattr(rplan, "group_ms", None))
 
+    def _planner_takes_weights(self) -> bool:
+        """Whether the cost model's plan_round accepts the tenancy
+        ``weights`` kwarg (duck-typed stub planners may not)."""
+        if self._plan_weights_ok is None:
+            try:
+                sig = inspect.signature(self.cost_model.plan_round)
+                self._plan_weights_ok = "weights" in sig.parameters
+            except (TypeError, ValueError):
+                self._plan_weights_ok = False
+        return self._plan_weights_ok
+
     def _round_done(self, predicted_ms: float) -> None:
         """Release a round's in-flight accounting and depth slot."""
         with self._done_cv:
@@ -526,29 +644,41 @@ class VisionServeEngine:
         self.metrics.on_inflight(-1)
         self._depth_sem.release()
 
-    # -- mid-flight replanning ------------------------------------------------
-    def _replan_round(self, rnd: "_Round", outs: List[tuple]) -> None:
-        """Backfill a dispatched round's predicted-idle device groups with
+    # -- reactive mid-flight replanning ---------------------------------------
+    def _replan_round(self, rnd: "_Round", outs: List[tuple],
+                      t0: float) -> None:
+        """Backfill a dispatched round's OBSERVED-idle device groups with
         queued work (runs on the device thread, right after the round's
-        scheduled parts were dispatched).
+        scheduled parts were dispatched at ``t0``).
 
-        A round costs its slowest group; every other group finishes early
-        by its ``group_ms`` gap and then idles — the utilization leak the
-        hybrid planner shrinks structurally and this replanner recovers at
-        runtime.  Any group predicted to finish at least one planning
-        quantum (the round's smallest scheduled batch, or
-        ``replan_quantum_ms``) before the round's predicted end gets the
-        next FIFO-eligible batch whose jit entry is already warm and whose
-        predicted latency fits inside the idle window, dispatched
-        back-to-back onto the idle group.  Dispatch is async, so a
-        misprediction costs nothing extra — the device stream serializes
-        its own work — and the fit-inside-the-window bound keeps the
-        round's predicted end authoritative.  Backfilled parts ride the
+        A round costs its slowest group, so every other group idles from
+        its own completion until the round's end — the utilization leak
+        the hybrid planner shrinks structurally and this replanner
+        recovers at runtime.  Earlier revisions backfilled on *plan-time*
+        gap predictions (``group_ms`` deltas); this loop is reactive: it
+        polls each group's dispatched outputs through the engine's
+        ``ReadinessProbe`` (non-blocking ``jax.Array.is_ready``), and
+        only a group whose work is ACTUALLY complete — with at least one
+        planning quantum left before the round's predicted end — gets the
+        next FIFO-eligible batch whose jit entry is already warm and
+        whose predicted latency fits the remaining window.  A group that
+        finishes faster than predicted is backfilled earlier; a group
+        running late is never double-loaded on a stale prediction.  Each
+        observed completion also feeds ``metrics.on_group_complete`` with
+        |predicted - actual|, the per-group reactive analogue of the
+        round-level prediction error.
+
+        The loop exits when every group is observed complete with nothing
+        left to backfill, when the remaining window cannot fit a quantum,
+        or when the queue is empty — it never outlives the round's
+        predicted end by more than one poll interval, so the device
+        thread keeps its pipelining role.  Backfilled parts ride the
         round's existing pipeline slot; the completer fans their results
         exactly like scheduled parts, but their latency observations are
         flagged partial so round-level calibration fits ignore them."""
+        groups = rnd.groups
         group_ms = list(rnd.group_ms or [])
-        if len(group_ms) < 2 or rnd.groups is None:
+        if not groups or len(group_ms) != len(groups):
             return
         round_end = max(group_ms)
         quantum = self.replan_quantum_ms
@@ -556,35 +686,61 @@ class VisionServeEngine:
             quantum = min(p.plan.predicted_ms for p in rnd.parts)
         if quantum <= 0.0:
             return
-        exhausted: set = set()
+        n = len(groups)
+        # outstanding dispatched outputs per group (scheduled parts now,
+        # backfills as they are dispatched)
+        pending: Dict[int, List] = {gi: [] for gi in range(n)}
+        for p, logits, _t in outs:
+            pending[p.group if p.group is not None else 0].append(logits)
+        completed: Set[int] = set()
+        exhausted: Set[int] = set()
         while True:
-            eligible = [g for g in range(len(group_ms))
-                        if g not in exhausted
-                        and round_end - group_ms[g] >= quantum]
-            if not eligible:
-                return
-            gi = min(eligible, key=lambda g: (group_ms[g], g))
-            prep = self._pop_warm_batch(rnd.groups[gi],
-                                        round_end - group_ms[gi])
-            if prep is None:
-                # nothing queued is warm for (or fits) THIS group; others
-                # may still be backfillable.  Exhaustion is sticky: the
-                # queue only shrinks during the loop, so a group that had
-                # no eligible batch cannot gain one
-                exhausted.add(gi)
+            now_ms = (self._clock() - t0) * 1e3
+            for gi in range(n):
+                if gi in completed:
+                    continue
+                self.metrics.on_probe_poll(max(1, len(pending[gi])))
+                if all(self._probe.poll(out) for out in pending[gi]):
+                    completed.add(gi)
+                    self.metrics.on_group_complete(group_ms[gi], now_ms)
+            idle_ms = round_end - now_ms
+            progressed = False
+            if idle_ms >= quantum:
+                for gi in sorted(completed - exhausted):
+                    prep = self._pop_warm_batch(groups[gi], idle_ms,
+                                                group_index=gi)
+                    if prep is None:
+                        # nothing queued is warm for (or fits) THIS group;
+                        # exhaustion is sticky so the loop stays bounded
+                        exhausted.add(gi)
+                        continue
+                    try:
+                        logits = self.registry.apply(prep.batch.model,
+                                                     prep.batch.images,
+                                                     devices=prep.devices)
+                    except Exception as exc:
+                        logits = _BatchError(exc)
+                    outs.append((prep, logits, self._clock()))
+                    pending[gi].append(logits)
+                    # new outstanding work: the group must be observed
+                    # complete again before another backfill
+                    completed.discard(gi)
+                    group_ms[gi] += prep.plan.predicted_ms
+                    self.metrics.on_replan(prep.plan.predicted_ms)
+                    progressed = True
+            if progressed:
                 continue
-            try:
-                logits = self.registry.apply(prep.batch.model,
-                                             prep.batch.images,
-                                             devices=prep.devices)
-            except Exception as exc:
-                logits = _BatchError(exc)
-            outs.append((prep, logits, self._clock()))
-            group_ms[gi] += prep.plan.predicted_ms
-            self.metrics.on_replan(prep.plan.predicted_ms)
+            if len(completed) == n:
+                return              # all observed done, nothing backfillable
+            if idle_ms < quantum:
+                return              # window too small for any further work
+            if exhausted >= set(range(n)) or self._queue.pending() == 0:
+                return              # no backfill can ever apply
+            self._probe.wait(self.probe_interval_ms)
 
-    def _pop_warm_batch(self, group: Optional[tuple],
-                        idle_ms: float) -> Optional[_Prepared]:
+    def _pop_warm_batch(self, group: Optional[tuple], idle_ms: float,
+                        group_index: Optional[int] = None
+                        ) -> Optional[_Prepared]:
         """Pop and form the next FIFO-eligible batch for an idle device
         group: the oldest queued model whose best bucket for the group is
         already compiled AND predicted to fit inside ``idle_ms``.  None
@@ -612,7 +768,8 @@ class VisionServeEngine:
             except Exception as exc:
                 self._fail(reqs, plan, exc, in_flight=False)
                 continue
-            return _Prepared(batch, plan, devices=group, replanned=True)
+            return _Prepared(batch, plan, devices=group, replanned=True,
+                             group=group_index)
         return None
 
     def _is_warm(self, model_key: str, bucket: int,
@@ -648,7 +805,7 @@ class VisionServeEngine:
                             logits = _BatchError(exc)
                         outs.append((p, logits, self._clock()))
                     if self.replan:
-                        self._replan_round(item, outs)
+                        self._replan_round(item, outs, t0)
                     self._complete_q.put((item, outs, t0))
                     continue
                 try:
@@ -726,7 +883,8 @@ class VisionServeEngine:
         out = [VisionResult(r.rid, r.model, "error", None,
                             plan.predicted_ms if plan else 0.0,
                             bucket=plan.bucket if plan else 0,
-                            batch_fill=len(reqs), error=repr(exc))
+                            batch_fill=len(reqs), error=repr(exc),
+                            slo_class=r.slo_class, tenant=r.tenant)
                for r in reqs]
         with self._lock:
             for res in out:
@@ -776,7 +934,7 @@ class VisionServeEngine:
                 queue_ms=(t0 - r.t_submit) * 1e3, run_ms=run_ms,
                 e2e_ms=(t1 - r.t_submit) * 1e3, bucket=plan.bucket,
                 batch_fill=batch.fill, calibrated=plan.calibrated,
-                n_devices=nd))
+                n_devices=nd, slo_class=r.slo_class, tenant=r.tenant))
         # publish results and resolve futures BEFORE signalling completion:
         # a flush() woken by the notify clears self._futures, so a future
         # resolved after the notify could be lost to a concurrent waiter
@@ -785,7 +943,9 @@ class VisionServeEngine:
                 self._results[res.rid] = res
             futs = [self._futures.get(res.rid) for res in out]
         for fut, res in zip(futs, out):
-            self.metrics.on_complete(model_key, res.e2e_ms, run_ms)
+            self.metrics.on_complete(model_key, res.e2e_ms, run_ms,
+                                     slo_class=res.slo_class,
+                                     tenant=res.tenant)
             if fut is not None:
                 fut._resolve(res)
         with self._done_cv:
@@ -936,7 +1096,8 @@ class VisionServeEngine:
         for snap in iter(self._queue.snapshot_oldest, None):
             model_key, depth, _ = snap
             for r in self._queue.pop(model_key, depth):
-                res = VisionResult(r.rid, model_key, "cancelled", None, 0.0)
+                res = VisionResult(r.rid, model_key, "cancelled", None, 0.0,
+                                   slo_class=r.slo_class, tenant=r.tenant)
                 with self._lock:
                     self._results[r.rid] = res
                     fut = self._futures.get(r.rid)

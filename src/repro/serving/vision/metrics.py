@@ -33,6 +33,8 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from .tenancy import jain_fairness as _jain
+
 
 def percentile(values: List[float], p: float) -> float:
     """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
@@ -83,7 +85,8 @@ class LatencyStat:
 
     def summary(self) -> Dict[str, float]:
         return {"count": self.count, "mean_ms": self.mean,
-                "p50_ms": self.p(50), "p99_ms": self.p(99)}
+                "p50_ms": self.p(50), "p95_ms": self.p(95),
+                "p99_ms": self.p(99)}
 
 
 class ServeMetrics:
@@ -132,6 +135,19 @@ class ServeMetrics:
         # groups, and the predicted idle wall-ms those batches recovered
         self.replans = 0
         self.replan_idle_recovered_ms = 0.0
+        # reactive completion: readiness-probe polls issued by the device
+        # thread, and per-group |predicted - actual| completion error
+        # (round_pred_err above is per-round; this one is per device
+        # group, measured at the probe's observed completion)
+        self.probe_polls = 0
+        self.group_pred_err = LatencyStat()
+        # tenancy: shed requests per SLO class, per-class and per-tenant
+        # end-to-end latency ledgers, per-tenant completion counts for
+        # the fairness index
+        self.shed: Dict[str, int] = {}
+        self.class_e2e: Dict[str, LatencyStat] = {}
+        self.tenant_e2e: Dict[str, LatencyStat] = {}
+        self.tenant_completed: Dict[str, int] = {}
 
     def reset(self) -> None:
         """Zero every counter/distribution (e.g. after warm-up traffic so a
@@ -175,12 +191,44 @@ class ServeMetrics:
             self._t_last = self._clock()
 
     def on_complete(self, model: str, e2e_ms: float,
-                    run_ms: Optional[float] = None) -> None:
+                    run_ms: Optional[float] = None, *,
+                    slo_class: Optional[str] = None,
+                    tenant: Optional[str] = None) -> None:
         with self._lock:
             self.completed += 1
             self._stat(self.e2e, model).record(e2e_ms)
             if run_ms is not None:
                 self._stat(self.run, model).record(run_ms)
+            if slo_class is not None:
+                self._stat(self.class_e2e, slo_class).record(e2e_ms)
+            if tenant is not None:
+                self._stat(self.tenant_e2e, tenant).record(e2e_ms)
+                self.tenant_completed[tenant] = \
+                    self.tenant_completed.get(tenant, 0) + 1
+
+    def on_shed(self, slo_class: str) -> None:
+        """One queued request shed at admission time to make room for a
+        higher-priority one."""
+        with self._lock:
+            self.shed[slo_class] = self.shed.get(slo_class, 0) + 1
+
+    def on_probe_poll(self, n: int = 1) -> None:
+        """The device thread polled round readiness ``n`` times."""
+        with self._lock:
+            self.probe_polls += n
+
+    def on_group_complete(self, predicted_ms: float,
+                          measured_ms: float) -> None:
+        """One device group observed complete by the readiness probe:
+        record |predicted - actual| for the group, the reactive analogue
+        of the per-round prediction error."""
+        with self._lock:
+            self.group_pred_err.record(abs(predicted_ms - measured_ms))
+
+    def fairness_index(self) -> float:
+        """Jain's index over per-tenant completed counts (1.0 = even)."""
+        with self._lock:
+            return _jain(list(self.tenant_completed.values()))
 
     def on_round(self, n_models: int, n_groups: int, *,
                  strategy: Optional[str] = None,
@@ -290,6 +338,16 @@ class ServeMetrics:
                 "hybrid_compositions": dict(self.hybrid_compositions),
                 "replans": self.replans,
                 "replan_idle_recovered_ms": self.replan_idle_recovered_ms,
+                "probe_polls": self.probe_polls,
+                "group_pred_abs_err_ms": self.group_pred_err.summary(),
+                "shed": dict(self.shed),
+                "class_e2e": {c: s.summary()
+                              for c, s in self.class_e2e.items()},
+                "tenant_e2e": {t: s.summary()
+                               for t, s in self.tenant_e2e.items()},
+                "tenant_completed": dict(self.tenant_completed),
+                "fairness_index": _jain(
+                    list(self.tenant_completed.values())),
                 "max_in_flight": self.max_in_flight,
                 "host_busy_s": self.host_busy_s,
                 "device_busy_s": self.device_busy_s,

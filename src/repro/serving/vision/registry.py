@@ -142,7 +142,17 @@ class ModelRegistry:
                                           train=False, backend=backend)
             return logits
 
-        return jax.jit(apply)
+        # Donate the batch input: it is dead after the call (the engine
+        # pads into a fresh bucket array per round), so XLA may reuse its
+        # buffer for the logits — one bucket-sized allocation less per
+        # dispatch.  Params are NOT donated (they are the long-lived cached
+        # placements).  When shapes prevent reuse XLA warns "Some donated
+        # buffers were not usable"; that is expected for odd logit shapes,
+        # so it is suppressed here and nowhere else.
+        import warnings
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return jax.jit(apply, donate_argnums=(1,))
 
     def apply_fn(self, key: str, bucket: int) -> Callable:
         """The jitted apply for one (model, batch-bucket) shape class."""

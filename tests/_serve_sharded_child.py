@@ -9,14 +9,17 @@ parent's tests assert on its fields, so one process launch (and one jax
 warmup) serves every test.
 """
 import os
-
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
-import json  # noqa: E402
-import sys   # noqa: E402
+import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# the shared entry-point environment shim: merges the virtual-device flag
+# into XLA_FLAGS (and quiets TF logging) BEFORE anything imports jax
+from repro.launch.env import configure  # noqa: E402
+
+configure(host_device_count=8)
+
+import json  # noqa: E402
 
 import numpy as np  # noqa: E402
 

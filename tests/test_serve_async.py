@@ -580,7 +580,7 @@ def test_replan_backfills_idle_group_with_warm_batches():
     rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "a", "a"])
     assert sorted(p.batch.model for p in rnd.parts) == ["a", "b"]
     assert engine._queue.pending() == 2          # two 'a's still queued
-    engine._replan_round(rnd, outs)
+    engine._replan_round(rnd, outs, t0)
     assert engine._queue.pending() == 0          # both backfilled
     extra = [prep for prep, _, _ in outs if prep.replanned]
     assert len(extra) == 2
@@ -608,7 +608,7 @@ def test_replan_only_dispatches_batches_that_fit_the_idle_window():
     engine = _replan_engine(reg)
     rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "b"])
     assert engine._queue.pending() == 1
-    engine._replan_round(rnd, outs)
+    engine._replan_round(rnd, outs, t0)
     assert engine._queue.pending() == 1          # still queued for round 2
     assert len(outs) == 2
     assert engine.metrics.snapshot()["replans"] == 0
@@ -652,7 +652,7 @@ def test_replan_falls_through_to_the_next_idle_group():
                                cross_model=True, replan=True)
     rnd, outs, t0 = _drive_round(engine, reg, ["a", "c", "b", "a"])
     assert engine._queue.pending() == 1          # the extra 'a'
-    engine._replan_round(rnd, outs)
+    engine._replan_round(rnd, outs, t0)
     extra = [p for p, _, _ in outs if p.replanned]
     assert len(extra) == 1
     assert extra[0].devices == (1,)              # backfilled g1, not cold g0
@@ -673,7 +673,7 @@ def test_replan_skips_cold_jit_entries():
     reg = ColdRegistry(keys=("a", "b"))
     engine = _replan_engine(reg)
     rnd, outs, t0 = _drive_round(engine, reg, ["a", "b", "a"])
-    engine._replan_round(rnd, outs)
+    engine._replan_round(rnd, outs, t0)
     assert engine._queue.pending() == 1
     assert engine.metrics.snapshot()["replans"] == 0
     engine._complete_round(rnd, outs, t0, None)

@@ -73,6 +73,43 @@ def test_registry_rejects_duplicate_key():
         reg.register(NET, "depthwise")
 
 
+def test_registry_donates_batch_input_not_params(monkeypatch):
+    # The jit entry must donate exactly the batch argument (argnum 1):
+    # donating params would invalidate the cached replicated placements.
+    seen = []
+    real_jit = jax.jit
+
+    def spy_jit(fun, *a, **kw):
+        seen.append(kw.get("donate_argnums"))
+        return real_jit(fun, *a, **kw)
+
+    monkeypatch.setattr(jax, "jit", spy_jit)
+    reg = ModelRegistry(backend="xla")
+    reg.register(NET, "depthwise")
+    x = np.zeros((2, 32, 32, 3), np.float32)
+    reg.apply("tiny_net/depthwise", x)
+    assert seen == [(1,)]
+
+
+def test_registry_donation_keeps_repeated_apply_bitwise():
+    # Donation must not change results: repeated applies on the same host
+    # batch (fresh device copy per call) stay bitwise equal to the direct
+    # un-jitted zoo apply, and params survive across calls.
+    reg = ModelRegistry(backend="xla")
+    model = reg.register(NET, "fuse_full")
+    x = np.random.default_rng(3).standard_normal(
+        (2, 32, 32, 3)).astype(np.float32)
+    ref, _ = zoo.apply_network(model.params, NET, x, "fuse_full",
+                               train=False, backend=model.backend)
+    first = np.asarray(reg.apply("tiny_net/fuse_full", x))
+    np.testing.assert_allclose(first, np.asarray(ref), rtol=1e-5, atol=1e-5)
+    for _ in range(3):
+        # bitwise-stable across calls: a reused (donated) output buffer
+        # must never leak a previous call's state into the next
+        np.testing.assert_array_equal(
+            np.asarray(reg.apply("tiny_net/fuse_full", x)), first)
+
+
 # ---------------------------------------------------------------------------
 # Cost model.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,499 @@
+"""Tenancy: SLO classes, shedding, planner weights, traffic, fairness.
+
+Deterministic throughout: fake clocks, stub registries/cost models (the
+test_serve_async idiom), and seeded traffic generators — the acceptance
+scenario pins shed ordering (batch gives way before interactive) and the
+interactive class's p95 under a bursty two-class mix.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving.vision import (BucketPlan, ReadinessProbe, RequestQueue,
+                                  RoundPart, RoundPlan, TenantSpec,
+                                  VisionRequest, VisionServeEngine,
+                                  class_priority, class_weight,
+                                  jain_fairness, make_tenant_trace,
+                                  slo_class, submit_trace)
+from repro.serving.vision.traffic import _arrival_times_ms
+
+
+class FakeClock:
+    """Monotonic fake clock advancing a fixed tick per read (thread-safe)."""
+
+    def __init__(self, tick: float = 1e-3):
+        self._t = 0.0
+        self._tick = tick
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            self._t += self._tick
+            return self._t
+
+
+class StubModel:
+    def __init__(self, key, resolution=8):
+        self.key = key
+        self.resolution = resolution
+
+
+class StubRegistry:
+    def __init__(self, keys=("m",), resolution=8):
+        self._models = {k: StubModel(k, resolution) for k in keys}
+        self.applied = []
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        return self._models[key]
+
+    def keys(self):
+        return list(self._models)
+
+    def prewarm(self, key, buckets, **kw):
+        pass
+
+    def apply(self, key, images, devices=None):
+        with self._lock:
+            self.applied.append((key, images.shape))
+        means = images.reshape(images.shape[0], -1).mean(axis=1)
+        return np.stack([means, np.ones_like(means)], axis=1)
+
+
+class StubCostModel:
+    """Fixed per-batch latency, greedy max-bucket batching."""
+
+    def __init__(self, ms_per_batch=10.0):
+        self.ms = ms_per_batch
+        self.observed = []
+
+    def _bucket(self, queued, buckets):
+        for b in sorted(buckets):
+            if b >= queued:
+                return b
+        return max(buckets)
+
+    def plan_bucket(self, model, queued, buckets):
+        b = self._bucket(queued, buckets)
+        return BucketPlan(b, min(queued, b), self.ms)
+
+    def drain_ms(self, model, queued, buckets):
+        bmax = max(buckets)
+        return -(-queued // bmax) * self.ms
+
+    def admit(self, model, slo_ms, queued, buckets, backlog_ms=0.0,
+              group_size=None):
+        predicted = backlog_ms + self.drain_ms(model, queued + 1, buckets)
+        if slo_ms is None:
+            return True, predicted
+        return predicted <= slo_ms, predicted
+
+    def predicted_ms(self, model, batch):
+        return self.ms
+
+    def observe(self, model, bucket, measured_ms):
+        self.observed.append((model.key, bucket, measured_ms))
+        return None
+
+
+def _img(seed, res=8):
+    return np.full((res, res, 3), float(seed), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# SLO classes + fairness index.
+# ---------------------------------------------------------------------------
+
+def test_slo_class_registry():
+    assert slo_class(None).name == "batch"          # back-compat default
+    inter, batch = slo_class("interactive"), slo_class("batch")
+    assert inter.priority > batch.priority
+    assert inter.weight > batch.weight
+    assert class_priority("interactive") == inter.priority
+    assert class_weight("batch") == batch.weight
+    with pytest.raises(KeyError):
+        slo_class("gold")
+
+
+def test_jain_fairness_counts_starvation():
+    assert jain_fairness([]) == 1.0
+    assert jain_fairness([7, 7, 7]) == pytest.approx(1.0)
+    assert jain_fairness([5, 0]) == pytest.approx(0.5)   # starved tenant
+    assert jain_fairness([4, 2]) == pytest.approx(0.9)
+    assert jain_fairness([0, 0]) == 1.0                  # vacuously even
+
+
+# ---------------------------------------------------------------------------
+# Queue shedding primitives.
+# ---------------------------------------------------------------------------
+
+def _push(q, rid, t, cls, model="m"):
+    q.push(VisionRequest(rid, model, _img(rid), t, slo_class=cls))
+
+
+def test_shed_lowest_takes_newest_of_lowest_class():
+    q = RequestQueue()
+    _push(q, 0, 1.0, "batch")
+    _push(q, 1, 2.0, "batch")
+    _push(q, 2, 3.0, "interactive")
+    _push(q, 3, 4.0, "batch", model="n")
+    inter_pri = class_priority("interactive")
+    # newest batch request across ALL models goes first
+    assert q.shed_lowest(inter_pri, class_priority).rid == 3
+    assert q.shed_lowest(inter_pri, class_priority).rid == 1
+    assert q.shed_lowest(inter_pri, class_priority).rid == 0
+    # only the interactive request remains: nothing strictly below it
+    assert q.shed_lowest(inter_pri, class_priority) is None
+    assert q.pending() == 1
+
+
+def test_shed_lowest_never_sheds_equal_priority():
+    # all-batch queue, batch incoming: priorities are equal everywhere, so
+    # the pre-tenancy behavior (plain rejection) is preserved
+    q = RequestQueue()
+    _push(q, 0, 1.0, "batch")
+    _push(q, 1, 2.0, "batch")
+    assert q.shed_lowest(class_priority("batch"), class_priority) is None
+    assert q.pending() == 2
+
+
+def test_class_weights_are_per_model_means():
+    q = RequestQueue()
+    _push(q, 0, 1.0, "interactive")
+    _push(q, 1, 2.0, "batch")
+    _push(q, 2, 3.0, "batch", model="n")
+    w = q.class_weights(class_weight)
+    wi, wb = class_weight("interactive"), class_weight("batch")
+    assert w["m"] == pytest.approx((wi + wb) / 2)
+    assert w["n"] == pytest.approx(wb)
+
+
+# ---------------------------------------------------------------------------
+# Engine shed path.
+# ---------------------------------------------------------------------------
+
+def _sync_engine(reg, **kw):
+    return VisionServeEngine(reg, cost_model=StubCostModel(),
+                             buckets=(1,), clock=FakeClock(),
+                             pipelined=False, **kw)
+
+
+def test_engine_sheds_batch_for_interactive():
+    # bucket-1 batches at 10ms each: an interactive request with a 40ms
+    # budget fits only with <= 3 requests ahead of it
+    reg = StubRegistry()
+    engine = _sync_engine(reg, shed=True)
+    batch_rids = [engine.submit("m", _img(i)) for i in range(6)]
+    rid = engine.submit("m", _img(9), slo_ms=40.0, slo_class="interactive",
+                        tenant="search")
+    # 6 queued -> predicted 70ms; shedding the 3 NEWEST batch requests
+    # brings it to 40ms
+    assert engine.future(rid).done() is False       # admitted, queued
+    results = {r.rid: r for r in engine.flush()}
+    assert results[rid].status == "ok"
+    assert results[rid].slo_class == "interactive"
+    assert results[rid].tenant == "search"
+    shed_rids = [r for r in batch_rids if results[r].status == "shed"]
+    assert shed_rids == batch_rids[3:]              # newest first
+    assert all(results[r].status == "ok" for r in batch_rids[:3])
+    snap = engine.metrics.snapshot()
+    assert snap["shed"] == {"batch": 3}
+    engine.close()
+
+
+def test_engine_shed_requires_opt_in():
+    reg = StubRegistry()
+    engine = _sync_engine(reg)                      # shed=False (default)
+    for i in range(6):
+        engine.submit("m", _img(i))
+    rid = engine.submit("m", _img(9), slo_ms=40.0, slo_class="interactive")
+    res = engine.future(rid).result(timeout=1)
+    assert res.status == "rejected"                 # pre-tenancy behavior
+    assert engine.metrics.snapshot()["shed"] == {}
+    engine.close()
+
+
+def test_engine_interactive_never_shed_for_batch():
+    reg = StubRegistry()
+    engine = _sync_engine(reg, shed=True)
+    rids = [engine.submit("m", _img(i), slo_class="interactive")
+            for i in range(6)]
+    rej = engine.submit("m", _img(9), slo_ms=40.0, slo_class="batch")
+    assert engine.future(rej).result(timeout=1).status == "rejected"
+    results = {r.rid: r for r in engine.flush()}
+    assert all(results[r].status == "ok" for r in rids)
+    engine.close()
+
+
+def test_engine_rejects_unknown_class():
+    engine = _sync_engine(StubRegistry())
+    with pytest.raises(KeyError):
+        engine.submit("m", _img(0), slo_class="gold")
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Planner weights pass-through.
+# ---------------------------------------------------------------------------
+
+class WeightsSpyCostModel(StubCostModel):
+    """Round planner recording the ``weights`` kwarg it was handed."""
+
+    n_devices = 1
+
+    def __init__(self):
+        super().__init__()
+        self.seen_weights = []
+
+    def plan_round(self, models, buckets, weights=None):
+        self.seen_weights.append(weights)
+        parts = [RoundPart(m.key, self.plan_bucket(m, d, buckets), 0)
+                 for m, d in models]
+        return RoundPlan(parts, 1, 1,
+                         sum(p.plan.predicted_ms for p in parts))
+
+    def drain_rounds_ms(self, models, buckets):
+        return sum(self.drain_ms(m, d, buckets) for m, d in models)
+
+
+class NoWeightsCostModel(WeightsSpyCostModel):
+    """Legacy planner signature: no ``weights`` parameter."""
+
+    def plan_round(self, models, buckets):          # noqa: D102
+        self.seen_weights.append("called-without-weights")
+        parts = [RoundPart(m.key, self.plan_bucket(m, d, buckets), 0)
+                 for m, d in models]
+        return RoundPlan(parts, 1, 1,
+                         sum(p.plan.predicted_ms for p in parts))
+
+
+def _drive_one_round(engine, reqs):
+    clock = engine._clock
+    for i, (key, cls) in enumerate(reqs):
+        engine._queue.push(VisionRequest(i, key, _img(i), clock(),
+                                         slo_class=cls))
+    engine._depth_sem.acquire()
+    rnd = engine._form_round()
+    assert rnd is not None
+    return rnd
+
+
+def test_planner_gets_weights_only_for_mixed_classes():
+    cm = WeightsSpyCostModel()
+    engine = VisionServeEngine(StubRegistry(), cost_model=cm, buckets=(1,),
+                               clock=FakeClock(), cross_model=True)
+    _drive_one_round(engine, [("m", "batch")])
+    assert cm.seen_weights == [None]                # uniform -> no kwarg
+    _drive_one_round(engine, [("m", "interactive")])
+    assert cm.seen_weights[-1] == {"m": class_weight("interactive")}
+    engine.close(drain=False)
+
+
+def test_planner_without_weights_param_still_works():
+    cm = NoWeightsCostModel()
+    engine = VisionServeEngine(StubRegistry(), cost_model=cm, buckets=(1,),
+                               clock=FakeClock(), cross_model=True)
+    _drive_one_round(engine, [("m", "interactive"), ("m", "batch")])
+    assert cm.seen_weights == ["called-without-weights"]
+    engine.close(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# Reactive probing (scripted probes; see test_serve_async for the replan
+# mechanics — these pin that backfill keys off OBSERVED completion).
+# ---------------------------------------------------------------------------
+
+class ReplanCostModel(StubCostModel):
+    """'a' (10ms) on group 0, others (100ms) on group 1."""
+
+    n_devices = 2
+
+    def __init__(self):
+        super().__init__()
+        self.partials = []
+
+    def _model_ms(self, model):
+        return 10.0 if model.key == "a" else 100.0
+
+    def plan_bucket(self, model, queued, buckets, group_size=None,
+                    quantile=None):
+        b = self._bucket(queued, buckets)
+        return BucketPlan(b, min(queued, b), self._model_ms(model))
+
+    def plan_round(self, models, buckets):
+        parts, group_ms = [], [0.0, 0.0]
+        for m, d in models:
+            grp = 0 if m.key == "a" else 1
+            plan = self.plan_bucket(m, d, buckets)
+            parts.append(RoundPart(m.key, plan, grp))
+            group_ms[grp] += plan.predicted_ms
+        return RoundPlan(parts, 2, 2, max(group_ms), group_sizes=[1, 1],
+                         group_ms=group_ms)
+
+    def drain_rounds_ms(self, models, buckets):
+        return sum(self.drain_ms(m, d, buckets) for m, d in models)
+
+    def observe(self, model, bucket, measured_ms, n_devices=1,
+                partial=False):
+        (self.partials if partial else self.observed).append(
+            (model.key, bucket, measured_ms))
+        return None
+
+
+class NeverReadyProbe(ReadinessProbe):
+    def poll(self, out):
+        return False
+
+    def wait(self, interval_ms):
+        pass                                        # fake clock drives time
+
+
+def _drive_replan_round(engine, reg, keys):
+    clock = engine._clock
+    for i, key in enumerate(keys):
+        engine._queue.push(VisionRequest(i, key, _img(i), clock()))
+    engine._depth_sem.acquire()
+    rnd = engine._form_round()
+    assert rnd is not None
+    t0 = clock()
+    outs = [(p, reg.apply(p.batch.model, p.batch.images), clock())
+            for p in rnd.parts]
+    return rnd, outs, t0
+
+
+def test_no_backfill_without_observed_completion():
+    # group 0 is PREDICTED idle for 90ms, but the probe never observes it
+    # complete — a reactive replanner must not dispatch on prediction
+    # alone (the pre-reactive behavior this subsystem replaces)
+    reg = StubRegistry(keys=("a", "b"))
+    engine = VisionServeEngine(reg, cost_model=ReplanCostModel(),
+                               buckets=(1,), clock=FakeClock(),
+                               cross_model=True, replan=True,
+                               probe=NeverReadyProbe())
+    rnd, outs, t0 = _drive_replan_round(engine, reg, ["a", "b", "a"])
+    engine._replan_round(rnd, outs, t0)
+    assert engine._queue.pending() == 1             # nothing backfilled
+    snap = engine.metrics.snapshot()
+    assert snap["replans"] == 0
+    assert snap["probe_polls"] > 0                  # it did keep polling
+    assert snap["group_pred_abs_err_ms"]["count"] == 0
+    engine._complete_round(rnd, outs, t0, None)
+    engine.close(drain=False)
+
+
+def test_observed_completion_feeds_group_error_and_backfill():
+    # default probe: stub outputs are host arrays (no is_ready), observed
+    # ready immediately — both queued 'a's backfill and every observed
+    # completion lands in the per-group error ledger
+    reg = StubRegistry(keys=("a", "b"))
+    engine = VisionServeEngine(reg, cost_model=ReplanCostModel(),
+                               buckets=(1,), clock=FakeClock(),
+                               cross_model=True, replan=True)
+    rnd, outs, t0 = _drive_replan_round(engine, reg, ["a", "b", "a", "a"])
+    engine._replan_round(rnd, outs, t0)
+    snap = engine.metrics.snapshot()
+    assert snap["replans"] == 2
+    assert snap["probe_polls"] > 0
+    # group 0 observed complete before each backfill and at the end,
+    # group 1 once: 4 group-completion observations
+    assert snap["group_pred_abs_err_ms"]["count"] == 4
+    engine._complete_round(rnd, outs, t0, None)
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Traffic generators.
+# ---------------------------------------------------------------------------
+
+def test_arrival_patterns_are_monotone_and_deterministic():
+    for pattern in ("poisson", "bursty", "diurnal", "heavy_tail"):
+        spec = TenantSpec("t", pattern=pattern, rate_rps=200.0)
+        t1 = _arrival_times_ms(spec, 64, np.random.default_rng(5))
+        t2 = _arrival_times_ms(spec, 64, np.random.default_rng(5))
+        assert len(t1) == 64
+        assert np.all(np.diff(t1) >= 0.0), pattern
+        np.testing.assert_array_equal(t1, t2)
+
+
+def test_bursty_pattern_clusters_arrivals():
+    spec = TenantSpec("t", pattern="bursty", burst_len=8, burst_gap_ms=0.1,
+                      burst_every_ms=500.0)
+    t = _arrival_times_ms(spec, 256, np.random.default_rng(0))
+    gaps = np.diff(t)
+    # bimodal gaps: many fast intra-burst steps, few long inter-burst ones
+    assert (gaps <= 0.1 + 1e-9).mean() > 0.5
+    assert gaps.max() > 100.0
+
+
+def test_heavy_tail_pattern_has_extreme_gaps():
+    spec = TenantSpec("t", pattern="heavy_tail", rate_rps=100.0, alpha=1.5)
+    t = _arrival_times_ms(spec, 2000, np.random.default_rng(1))
+    gaps = np.diff(t)
+    assert np.median(gaps) < 10.0                   # calm stretches
+    assert gaps.max() > 50.0 * np.median(gaps)      # punctured by silences
+
+
+def test_tenant_substreams_are_independent():
+    reg = StubRegistry(keys=("m",))
+    a = TenantSpec("a", rate_rps=100.0)
+    b = TenantSpec("b", pattern="bursty")
+    solo = [t for t, s, _, _ in make_tenant_trace(reg, [a], 8, seed=3)]
+    dual = [t for t, s, _, _ in make_tenant_trace(reg, [a, b], 8, seed=3)
+            if s.name == "a"]
+    assert solo == dual                             # b never perturbs a
+    trace = make_tenant_trace(reg, [a, b], 8, seed=3)
+    assert [t for t, _, _, _ in trace] == sorted(t for t, _, _, _ in trace)
+
+
+def test_unknown_pattern_rejected():
+    with pytest.raises(AssertionError):
+        TenantSpec("t", pattern="sawtooth")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: deterministic bursty two-class scenario.
+# ---------------------------------------------------------------------------
+
+def test_bursty_two_class_scenario_pins_p95_and_shed_order():
+    """A bursty batch tenant sharing one model with an SLO'd interactive
+    tenant, played deterministically (fake clock, realtime=False, sync
+    drain): every shed victim is batch-class, interactive requests are
+    never shed, admitted interactive requests ride near the queue head
+    (their p95 stays under the 40ms SLO while batch p95 sits far above),
+    and both tenants appear in the fairness ledger."""
+    reg = StubRegistry(keys=("m",))
+    engine = _sync_engine(reg, shed=True)
+    specs = [
+        TenantSpec("ads", pattern="bursty", slo_class="batch",
+                   burst_len=8, burst_gap_ms=0.1, burst_every_ms=30.0),
+        TenantSpec("search", pattern="poisson", rate_rps=150.0,
+                   slo_class="interactive", slo_ms=40.0),
+    ]
+    trace = make_tenant_trace(reg, specs, 24, seed=1)
+    submit_trace(engine, trace, realtime=False)
+    results = engine.flush()
+    by_class = {}
+    for r in results:
+        by_class.setdefault((r.slo_class, r.status), []).append(r)
+    # shed ordering: batch gives way, interactive never does
+    assert ("interactive", "shed") not in by_class
+    assert len(by_class[("batch", "shed")]) == 10   # deterministic pin
+    assert all(r.tenant == "ads" for r in by_class[("batch", "shed")])
+    snap = engine.metrics.snapshot()
+    assert snap["shed"] == {"batch": 10}
+    # interactive p95: admitted requests were placed <= 4 deep (40ms SLO
+    # over 10ms bucket-1 batches), so their e2e stays within the budget
+    # envelope (plus fake-clock ticks) while the un-SLO'd batch class
+    # queues far past it
+    inter_p95 = snap["class_e2e"]["interactive"]["p95_ms"]
+    batch_p95 = snap["class_e2e"]["batch"]["p95_ms"]
+    assert inter_p95 < batch_p95
+    assert inter_p95 <= 60.0                        # budget + clock ticks
+    assert batch_p95 > 60.0                         # measured 85.0
+    # served interactive requests completed ok
+    assert len(by_class[("interactive", "ok")]) == 4
+    # both tenants in the per-tenant ledgers + fairness index
+    assert set(snap["tenant_completed"]) == {"ads", "search"}
+    assert 0.0 < snap["fairness_index"] <= 1.0
+    engine.close()
