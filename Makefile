@@ -30,7 +30,7 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	$(PY) -m benchmarks.run serve serve_tenants --json BENCH_serve.json
+	$(PY) -m benchmarks.run serve serve_tenants kernels --json BENCH_serve.json
 	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
 	$(PY) -m benchmarks.run serve_sharded --json BENCH_serve.json
 

@@ -8,11 +8,19 @@ reports us/call for regression tracking.
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.fuse1d import fuse1d
+from repro.kernels.fused import fuseconv_fused
 from repro.kernels.matmul import matmul
 
 from benchmarks.common import emit, time_call
+
+
+def _decomposed_block(x, w_row, w_col, w_pw):
+    """The three-dispatch pipeline fuseconv_fused replaces (HBM round-trip
+    between the spatial banks and the pointwise mix)."""
+    sp = ops.fuse_conv2d_full(x, w_row, w_col, interpret=True)
+    return ops.pointwise(sp, w_pw, interpret=True)
 
 
 def run():
@@ -32,6 +40,22 @@ def run():
         us_r = time_call(jax.jit(ref.matmul_ref), a, b)
         emit(f"kernel.matmul.{m}x{kk}x{n2}", f"{us_k:.0f}",
              f"ref={us_r:.0f}us")
+    # Fused FuSeConv megakernel vs the decomposed 3-dispatch pipeline.
+    # Interpret mode measures dispatch-count wins, not TPU wall-clock —
+    # bench_check guards the ratio floor-only for exactly that reason.
+    for (b, hw, c, k, cout) in [(2, 32, 64, 3, 128)]:
+        x = jax.random.normal(key, (b, hw, hw, c))
+        w_row = jax.random.normal(key, (k, c)) * 0.5
+        w_col = jax.random.normal(key, (k, c)) * 0.5
+        w_pw = jax.random.normal(key, (2 * c, cout)) * 0.3
+        tag = f"b{b}s{hw}c{c}k{k}"
+        us_f = time_call(lambda *a: fuseconv_fused(*a, interpret=True),
+                         x, w_row, w_col, w_pw)
+        us_d = time_call(jax.jit(_decomposed_block), x, w_row, w_col, w_pw)
+        emit(f"kernel.fuseconv_fused.{tag}", f"{us_f:.0f}",
+             f"decomposed={us_d:.0f}us")
+        emit(f"kernel.fuseconv_decomposed.{tag}", f"{us_d:.0f}",
+             f"fused={us_f:.0f}us")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ ratios:
                        gain
 * ``serve_tenants``  — shed/noshed completed-interactive admission ratio
                        (a count ratio, floor-only)
+* ``kernels``        — fused-megakernel/decomposed-pipeline speedup
+                       (dispatch-count win in interpret mode, floor-only)
 
 Absolute us/request depends on the runner (container cores, CPU
 contention, thermal state) and would flake in CI; the *ratio* between two
@@ -71,6 +73,14 @@ RATIOS = [
     ("tenant_shed_admission", "serve_tenants",
      "serve_tenants.interactive_ok.shed.xla",
      "serve_tenants.interactive_ok.noshed.xla", 1.0, False),
+    # fused FuSeConv megakernel vs the decomposed 3-dispatch pipeline:
+    # interpret-mode CI measures dispatch-count wins, not TPU wall-clock,
+    # and the interpreter's per-op overhead dominates both sides — so
+    # floor-only (the fused kernel must not LOSE to the pipeline it
+    # replaces), no baseline ratchet.
+    ("fused_vs_decomposed", "kernels",
+     "kernel.fuseconv_decomposed.b2s32c64k3",
+     "kernel.fuseconv_fused.b2s32c64k3", 1.0, False),
 ]
 
 

@@ -5,27 +5,38 @@ Three ways to run the paper's operators:
   * ``xla``            — the pure-XLA reference path (``repro.core.fuseconv``
                          lax convolutions).  Always available; the
                          correctness oracle for the others.
-  * ``pallas``         — the Pallas ``fuse1d``/``matmul`` kernels executed in
-                         ``interpret=True`` mode (Python semantics on CPU —
-                         this container has no TPU).
+  * ``pallas``         — the Pallas kernels executed in ``interpret=True``
+                         mode (Python semantics on CPU — this container has
+                         no TPU).
   * ``pallas_tpu``     — the same kernels with ``interpret=False``; wired for
                          real TPU hardware, do not select on CPU.
 
 A ``Backend`` is a frozen value object threaded through
 ``repro.vision.zoo.apply_network`` (and anything else that executes
 operators) so a single flag flips the whole network between paths without
-re-tracing logic scattered across call sites.
+re-tracing logic scattered across call sites.  ``Backend.interpret`` is the
+ONLY source of truth for interpret-vs-compiled: kernel wrappers take
+``interpret=None`` and resolve it via :func:`resolve_interpret`, so a call
+site that forgets to thread the flag gets the process default instead of a
+silently hardcoded ``True`` (which would make ``pallas_tpu`` interpret).
+
+``Backend.fused`` gates the fused FuSeConv megakernel
+(``repro.kernels.fused.fuseconv_fused``): on by default for the pallas
+backends (inference only — training needs the decomposed path's separate
+BatchNorm), ``*_nofused`` keys pin the decomposed pipeline for
+differential testing and bisection.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Union
 
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
     name: str                 # "xla" | "pallas"
     interpret: bool = True    # only meaningful for the pallas kernels
+    fused: bool = True        # pallas only: use the fused FuSeConv megakernel
 
     def __post_init__(self):
         assert self.name in ("xla", "pallas"), self.name
@@ -38,22 +49,27 @@ class Backend:
     def key(self) -> str:
         """Stable string form (cache keys, CLI round-trips)."""
         if self.name == "pallas":
-            return "pallas" if self.interpret else "pallas_tpu"
+            base = "pallas" if self.interpret else "pallas_tpu"
+            return base if self.fused else base + "_nofused"
         return "xla"
 
 
 XLA = Backend("xla")
 PALLAS = Backend("pallas", interpret=True)
 PALLAS_TPU = Backend("pallas", interpret=False)
+PALLAS_NOFUSED = Backend("pallas", interpret=True, fused=False)
+PALLAS_TPU_NOFUSED = Backend("pallas", interpret=False, fused=False)
 
 _BY_KEY = {"xla": XLA, "pallas": PALLAS, "pallas_interpret": PALLAS,
-           "pallas_tpu": PALLAS_TPU}
+           "pallas_tpu": PALLAS_TPU, "pallas_nofused": PALLAS_NOFUSED,
+           "pallas_tpu_nofused": PALLAS_TPU_NOFUSED}
 
 BACKEND_KEYS = ("xla", "pallas", "pallas_tpu")
 
 
 def resolve_backend(spec: Union[str, Backend, None]) -> Backend:
-    """Accepts a Backend, one of BACKEND_KEYS, or None (-> XLA reference)."""
+    """Accepts a Backend, one of BACKEND_KEYS (plus the ``*_nofused``
+    debugging keys), or None (-> XLA reference)."""
     if spec is None:
         return XLA
     if isinstance(spec, Backend):
@@ -63,3 +79,17 @@ def resolve_backend(spec: Union[str, Backend, None]) -> Backend:
     except KeyError:
         raise ValueError(
             f"unknown backend {spec!r}; expected one of {BACKEND_KEYS}")
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument.
+
+    ``None`` means "nobody threaded a Backend here": fall back to the
+    process default, which is interpret mode — the safe choice on this
+    CPU container.  Call sites on the serving path must pass the resolved
+    ``Backend.interpret`` explicitly (pinned by the dispatch-spy test in
+    tests/test_backend_conformance.py) so ``pallas_tpu`` runs compiled.
+    """
+    if interpret is None:
+        return True
+    return bool(interpret)

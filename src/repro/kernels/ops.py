@@ -1,30 +1,46 @@
 """jit'd model-facing wrappers around the Pallas kernels.
 
 On this CPU container the kernels run in ``interpret=True`` mode (Python
-semantics, bit-equivalent block schedule); on TPU pass ``interpret=False``
-(wired through ``repro.launch`` config).  The wrappers own layout plumbing:
-padding, chunking long sequences into VMEM-sized tiles, and the 2-D
-row/column transposes that reduce FuSe-2D to the fuse1d primitive.
+semantics, bit-equivalent block schedule); on TPU the resolved
+``Backend.interpret`` (False for ``pallas_tpu``) must be threaded through —
+every wrapper takes ``interpret=None`` meaning "resolve the process default"
+(``backend.resolve_interpret``), never a hardcoded mode.  The wrappers own
+layout plumbing: padding, chunking long sequences into VMEM-sized tiles, and
+the 2-D row/column transposes that reduce FuSe-2D to the fuse1d primitive.
+
+The fused FuSeConv megakernel and the depthwise KxK kernel live in
+``repro.kernels.fused`` and are re-exported here (``fuseconv_fused``,
+``depthwise_kxk``) so ``zoo.apply_network`` has a single kernel namespace.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend as kb
 from repro.kernels import fuse1d as _fuse1d
+from repro.kernels import fused as _fused
 from repro.kernels import matmul as _matmul
+
+# Re-exported fused kernels (zoo dispatches through this module so the
+# dispatch-spy test can pin what actually runs).
+fuseconv_fused = _fused.fuseconv_fused
+depthwise_kxk = _fused.depthwise_kxk
+
+# Canonical SAME-padding split (XLA-compatible) shared with fused.py.
+_same_pad = _fused.same_pad
 
 # Chunk length for the fuse1d T axis: keeps (Tc+K-1, 128) fp32 tiles ~4 MB.
 MAX_T_CHUNK = 8192
 
 
 def fuse_conv1d_temporal(x: jax.Array, w: jax.Array, *, causal: bool = True,
-                         interpret: bool = True,
+                         interpret: Optional[bool] = None,
                          block_c: int = _fuse1d.DEFAULT_BLOCK_C) -> jax.Array:
     """Depthwise temporal conv via the fuse1d kernel.  x: (B,T,C), w: (K,C)."""
+    interpret = kb.resolve_interpret(interpret)
     b, t, c = x.shape
     k = w.shape[0]
     pad = (k - 1, 0) if causal else ((k - 1) // 2, k - (k - 1) // 2 - 1)
@@ -46,23 +62,10 @@ def fuse_conv1d_temporal(x: jax.Array, w: jax.Array, *, causal: bool = True,
     return y[:, :t, :]
 
 
-def _same_pad(extent: int, k: int, stride: int):
-    """XLA 'SAME' padding for a strided conv: (out_len, pad_lo, pad_hi).
-
-    XLA puts ``pad_total // 2`` on the low side; for stride > 1 over an even
-    extent that differs from the stride-1 centering, so the full-res-then-
-    subsample trick must pad with THIS split to stay bit-compatible with the
-    lax reference path.
-    """
-    out_len = -(-extent // stride)
-    pad_total = max(0, (out_len - 1) * stride + k - extent)
-    lo = pad_total // 2
-    return out_len, lo, pad_total - lo
-
-
 def fuse_conv2d_rows(x: jax.Array, w_row: jax.Array, *, stride: int = 1,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """Kx1 (vertical) bank via fuse1d.  x: (B,H,W,C), w_row: (K,C)."""
+    interpret = kb.resolve_interpret(interpret)
     b, h, wdim, c = x.shape
     # conv along H: fold W into the problem axis -> (B*W, H, C)
     xt = x.transpose(0, 2, 1, 3).reshape(b * wdim, h, c)
@@ -78,8 +81,9 @@ def fuse_conv2d_rows(x: jax.Array, w_row: jax.Array, *, stride: int = 1,
 
 
 def fuse_conv2d_cols(x: jax.Array, w_col: jax.Array, *, stride: int = 1,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """1xK (horizontal) bank via fuse1d.  x: (B,H,W,C), w_col: (K,C)."""
+    interpret = kb.resolve_interpret(interpret)
     b, h, wdim, c = x.shape
     xt = x.reshape(b * h, wdim, c)
     k = w_col.shape[0]
@@ -93,7 +97,9 @@ def fuse_conv2d_cols(x: jax.Array, w_col: jax.Array, *, stride: int = 1,
 
 
 def fuse_conv2d_half(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
-                     stride: int = 1, interpret: bool = True) -> jax.Array:
+                     stride: int = 1,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    interpret = kb.resolve_interpret(interpret)
     c_r = w_row.shape[-1]
     y_r = fuse_conv2d_rows(x[..., :c_r], w_row, stride=stride,
                            interpret=interpret)
@@ -103,16 +109,19 @@ def fuse_conv2d_half(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
 
 
 def fuse_conv2d_full(x: jax.Array, w_row: jax.Array, w_col: jax.Array, *,
-                     stride: int = 1, interpret: bool = True) -> jax.Array:
+                     stride: int = 1,
+                     interpret: Optional[bool] = None) -> jax.Array:
     """FuSe-Full: every channel gets a row AND a column filter -> 2C out."""
+    interpret = kb.resolve_interpret(interpret)
     y_r = fuse_conv2d_rows(x, w_row, stride=stride, interpret=interpret)
     y_c = fuse_conv2d_cols(x, w_col, stride=stride, interpret=interpret)
     return jnp.concatenate([y_r, y_c], axis=-1)
 
 
-def pointwise(x: jax.Array, w: jax.Array, *, interpret: bool = True
-              ) -> jax.Array:
+def pointwise(x: jax.Array, w: jax.Array, *,
+              interpret: Optional[bool] = None) -> jax.Array:
     """1x1 conv via the MXU matmul kernel.  x: (..., Cin), w: (Cin, Cout)."""
+    interpret = kb.resolve_interpret(interpret)
     lead = x.shape[:-1]
     y = _matmul.matmul(x.reshape(-1, x.shape[-1]), w, interpret=interpret)
     return y.reshape(*lead, w.shape[-1])

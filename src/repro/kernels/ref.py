@@ -19,3 +19,96 @@ def fuse1d_ref(x_pad: jax.Array, w: jax.Array) -> jax.Array:
 def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.dot(a.astype(jnp.float32),
                    b.astype(jnp.float32)).astype(a.dtype)
+
+
+def _same_pad(extent: int, k: int, stride: int):
+    """Independent copy of the XLA SAME-padding split (deliberately NOT
+    imported from kernels.fused — the oracle must not share code with the
+    kernel under test)."""
+    out_len = -(-extent // stride)
+    pad_total = max(0, (out_len - 1) * stride + k - extent)
+    lo = pad_total // 2
+    return out_len, lo, pad_total - lo
+
+
+_REF_ACTS = {
+    "linear": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+    "hswish": lambda x: x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0,
+}
+
+
+def depthwise_kxk_ref(x: jax.Array, w: jax.Array, *,
+                      stride: int = 1) -> jax.Array:
+    """Depthwise KxK conv, SAME padding.  x: (N,H,W,C), w: (K,K,C).
+
+    Python-loop over the K*K taps on the full-resolution padded input,
+    then strided subsample — obviously correct, painfully slow.
+    """
+    n, h, wd, c = x.shape
+    kh, kw = w.shape[0], w.shape[1]
+    out_h, lo_h, hi_h = _same_pad(h, kh, stride)
+    out_w, lo_w, hi_w = _same_pad(wd, kw, stride)
+    x_pad = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    acc = jnp.zeros((n, out_h, out_w, c), jnp.float32)
+    for th in range(kh):
+        for tw in range(kw):
+            win = x_pad[:, th:th + (out_h - 1) * stride + 1:stride,
+                        tw:tw + (out_w - 1) * stride + 1:stride, :]
+            acc = acc + win.astype(jnp.float32) * \
+                w[th, tw].astype(jnp.float32)[None, None, None, :]
+    return acc.astype(x.dtype)
+
+
+def fuseconv_fused_ref(x: jax.Array, w_row: jax.Array, w_col: jax.Array,
+                       w_pw: jax.Array, *, variant: str = "fuse_full",
+                       stride: int = 1, scale=None, bias=None,
+                       act: str = "linear") -> jax.Array:
+    """Oracle for the fused FuSeConv megakernel: row bank + col bank
+    (SAME padding, stride via subsample) -> concat -> per-channel affine
+    -> activation -> pointwise mix.  x: (N,H,W,C); w_row: (K,C_r);
+    w_col: (K,C_c); w_pw: (C_r+C_c, C_out)."""
+    n, h, wd, c = x.shape
+    k = w_row.shape[0]
+    c_r = w_row.shape[1]
+    if variant == "fuse_full":
+        x_row, x_col = x, x
+        assert c_r == c and w_col.shape[1] == c
+    elif variant == "fuse_half":
+        x_row, x_col = x[..., :c_r], x[..., c_r:]
+        assert c_r + w_col.shape[1] == c
+    else:
+        raise ValueError(variant)
+    out_h, lo_h, hi_h = _same_pad(h, k, stride)
+    out_w, lo_w, hi_w = _same_pad(wd, k, stride)
+
+    def bank(xb, wb, axis):
+        """Strided 1-D conv along `axis` with SAME padding, fp32 accum."""
+        pads = [(0, 0)] * 4
+        pads[axis] = (lo_h, hi_h) if axis == 1 else (lo_w, hi_w)
+        xp = jnp.pad(xb, pads)
+        out_len = out_h if axis == 1 else out_w
+        acc = jnp.zeros(xp.shape[:axis] + (out_len,) +
+                        xp.shape[axis + 1:], jnp.float32)
+        for tap in range(k):
+            sl = [slice(None)] * 4
+            sl[axis] = slice(tap, tap + (out_len - 1) * stride + 1, stride)
+            acc = acc + xp[tuple(sl)].astype(jnp.float32) * \
+                wb[tap].astype(jnp.float32)
+        return acc
+
+    # Each bank convolves one axis; the other axis is a 1-wide SAME conv
+    # (pad 0, subsample from index 0).
+    y_r = bank(x_row, w_row, 1)              # (N, out_h, W, C_r)
+    y_r = y_r[:, :, ::stride, :][:, :, :out_w, :]
+    y_c = bank(x_col, w_col, 2)              # (N, H, out_w, C_c)
+    y_c = y_c[:, ::stride, :, :][:, :out_h, :, :]
+    y_sp = jnp.concatenate([y_r, y_c], axis=-1)   # (N, out_h, out_w, C_r+C_c)
+    if scale is not None:
+        y_sp = y_sp * scale.astype(jnp.float32)
+    if bias is not None:
+        y_sp = y_sp + bias.astype(jnp.float32)
+    y_sp = _REF_ACTS[act](y_sp)
+    y = jnp.einsum("nhwc,cd->nhwd", y_sp, w_pw.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -202,3 +202,39 @@ def simulate_op(op: OpSpec, cfg: SystolicConfig, *, dataflow: str = "OS",
     if op.kind in ("pool", "add"):
         return None  # negligible, handled by the vector periphery
     raise ValueError(op.kind)
+
+
+def simulate_fused_block(row_op: OpSpec, col_op: OpSpec, pw_op: OpSpec,
+                         cfg: SystolicConfig, *, stos_mapping: str = "hybrid",
+                         batch: int = 1) -> LayerSim:
+    """Price a fused FuSeConv block (row bank + col bank + pointwise mix).
+
+    Fusion is a memory-system optimization, not a compute one: the array
+    still executes every MAC of the three constituent ops, so compute
+    cycles, useful MACs, and SRAM traffic are exactly the sums of the
+    decomposed parts (ST-OS for the 1-D banks, OS for the mix) and the
+    serving cost model needs no new calibration keys.  What fusion removes
+    is the HBM round-trip of the spatial intermediate: the decomposed
+    pipeline writes the ``c_sp``-channel spatial ofmap to DRAM and reads it
+    back as the pointwise ifmap; fused, it never leaves the chip — DRAM
+    traffic drops by 2 x intermediate-size.  Pinned against golden cycle
+    counts in tests/test_systolic.py.
+    """
+    assert pw_op.in_c == row_op.out_c + col_op.out_c, \
+        (pw_op.in_c, row_op.out_c, col_op.out_c)
+    parts = [simulate_op(row_op, cfg, dataflow="ST-OS",
+                         stos_mapping=stos_mapping, batch=batch),
+             simulate_op(col_op, cfg, dataflow="ST-OS",
+                         stos_mapping=stos_mapping, batch=batch),
+             simulate_op(pw_op, cfg, dataflow="OS", batch=batch)]
+    intermediate = pw_op.out_h * pw_op.out_w * batch * pw_op.in_c
+    saved = 2 * intermediate * cfg.bytes_per_elem
+    return LayerSim(
+        name=pw_op.name + "/fused", kind="fuse_block", dataflow="ST-OS+OS",
+        compute_cycles=sum(p.compute_cycles for p in parts),
+        useful_macs=sum(p.useful_macs for p in parts),
+        ifmap_sram_bytes=sum(p.ifmap_sram_bytes for p in parts),
+        weight_sram_bytes=sum(p.weight_sram_bytes for p in parts),
+        ofmap_sram_bytes=sum(p.ofmap_sram_bytes for p in parts),
+        dram_bytes=sum(p.dram_bytes for p in parts) - saved,
+        stall_cycles=sum(p.stall_cycles for p in parts))

@@ -62,6 +62,19 @@ def apply_bn(p: dict, x: Array, *, train: bool, eps: float = 1e-5,
     return y, new_p
 
 
+def bn_inference_affine(p: dict, eps: float = 1e-5) -> Tuple[Array, Array]:
+    """Fold inference-mode BN into a per-channel affine: y = x * g + b.
+
+    g = scale / sqrt(var + eps), b = bias - mean * g — algebraically equal
+    to ``apply_bn(p, x, train=False)``, which is what lets the fused
+    FuSeConv megakernel apply BN in-kernel between the spatial banks and
+    the pointwise mix.  Inference only: train-mode BN needs batch stats of
+    the materialized spatial output.
+    """
+    g = p["scale"] * jax.lax.rsqrt(p["var"] + eps)
+    return g, p["bias"] - p["mean"] * g
+
+
 # ---------------------------------------------------------------------------
 # Conv / dense inits (He normal).
 # ---------------------------------------------------------------------------

@@ -238,17 +238,32 @@ def _apply_spatial(p: dict, spec: fc.SpatialOpSpec, x: Array,
                    backend: kb.Backend) -> Array:
     """Spatial stage on the selected backend.
 
-    The Pallas path covers the FuSe variants (the operators the paper
-    accelerates); depthwise/scaffold stages have no Pallas kernel and always
-    run the XLA reference — exactly the hardware story: FuSe 1-D banks get
-    the custom dataflow, the baseline op does not.
+    The Pallas path covers the FuSe variants (decomposed 1-D banks) and the
+    baseline ``depthwise`` KxK stage (``kernels.fused.depthwise_kxk``) —
+    baseline depthwise-separable nets are servable on Pallas instead of
+    silently falling back to XLA.  Scaffold stages (dense KxK convs) keep
+    the XLA reference.
     """
     if backend.use_pallas and spec.variant in ("fuse_half", "fuse_full"):
         f = (kops.fuse_conv2d_half if spec.variant == "fuse_half"
              else kops.fuse_conv2d_full)
         return f(x, p["row"], p["col"], stride=spec.stride,
                  interpret=backend.interpret)
+    if backend.use_pallas and spec.variant == "depthwise":
+        return kops.depthwise_kxk(x, p["dw"], stride=spec.stride,
+                                  interpret=backend.interpret)
     return fc.apply_spatial_op(p, spec, x)
+
+
+def _fusable(bk: kb.Backend, variant: str, *, train: bool,
+             se: bool = False) -> bool:
+    """True when the block's spatial stage + bn1 + act + pointwise mix can
+    run as one ``fuseconv_fused`` megakernel: pallas backend with fusion
+    on, a FuSe variant, inference mode (train-mode BN needs the
+    materialized spatial output for batch stats), and no SE block (its
+    global pooling sits between the spatial stage and the mix)."""
+    return (bk.use_pallas and bk.fused and not train and not se
+            and variant in ("fuse_half", "fuse_full"))
 
 
 def _pointwise(x: Array, w: Array, backend: kb.Backend) -> Array:
@@ -258,14 +273,21 @@ def _pointwise(x: Array, w: Array, backend: kb.Backend) -> Array:
 
 
 def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
-                  *, train: bool = False, backend=None):
+                  *, train: bool = False, backend=None,
+                  fused: Optional[bool] = None):
     """Returns (logits, new_params) — new_params only differs in BN stats.
 
-    ``backend`` selects the execution path for the FuSe spatial stages and
-    all 1x1 pointwise convs: None/"xla" (lax reference), "pallas"
+    ``backend`` selects the execution path for the spatial stages and all
+    1x1 pointwise convs: None/"xla" (lax reference), "pallas"
     (interpret-mode kernels on CPU), or "pallas_tpu" (interpret=False).
+
+    ``fused`` overrides ``Backend.fused``: when fusable (pallas, inference,
+    FuSe variant, no SE) a block's spatial stage + bn1 + act + pointwise
+    mix run as one ``fuseconv_fused`` megakernel.  The fused and decomposed
+    paths are pinned identical in tests/test_backend_conformance.py.
     """
     bk = kb.resolve_backend(backend)
+    use_fused = bk.fused if fused is None else fused
     variants = _variant_list(net, variant)
     new_params: list = []
     vi = 0
@@ -280,10 +302,17 @@ def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
         elif isinstance(b, DWSep):
             v = variants[vi]; vi += 1
             spec = fc.SpatialOpSpec(v, b.kernel, c, b.stride)
-            x = _apply_spatial(p["sp"], spec, x, bk)
-            x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
-            x = L.ACTS[b.act](x)
-            x = _pointwise(x, p["pw"], bk)
+            if use_fused and _fusable(bk, v, train=train):
+                g, bb = L.bn_inference_affine(p["bn1"])
+                x = kops.fuseconv_fused(
+                    x, p["sp"]["row"], p["sp"]["col"], p["pw"], variant=v,
+                    stride=b.stride, scale=g, bias=bb, act=b.act,
+                    interpret=bk.interpret)
+            else:
+                x = _apply_spatial(p["sp"], spec, x, bk)
+                x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
+                x = L.ACTS[b.act](x)
+                x = _pointwise(x, p["pw"], bk)
             x, np_["bn2"] = L.apply_bn(p["bn2"], x, train=train)
             x = L.ACTS[b.act](x)
             c = b.cout
@@ -296,12 +325,19 @@ def apply_network(params: list, net: NetworkDef, x: Array, variant="depthwise",
                 x, np_["bn0"] = L.apply_bn(p["bn0"], x, train=train)
                 x = L.ACTS[b.act](x)
             spec = fc.SpatialOpSpec(v, b.kernel, b.exp, b.stride)
-            x = _apply_spatial(p["sp"], spec, x, bk)
-            x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
-            x = L.ACTS[b.act](x)
-            if b.se:
-                x = L.apply_se(p["se"], x)
-            x = _pointwise(x, p["project"], bk)
+            if use_fused and _fusable(bk, v, train=train, se=b.se):
+                g, bb = L.bn_inference_affine(p["bn1"])
+                x = kops.fuseconv_fused(
+                    x, p["sp"]["row"], p["sp"]["col"], p["project"],
+                    variant=v, stride=b.stride, scale=g, bias=bb, act=b.act,
+                    interpret=bk.interpret)
+            else:
+                x = _apply_spatial(p["sp"], spec, x, bk)
+                x, np_["bn1"] = L.apply_bn(p["bn1"], x, train=train)
+                x = L.ACTS[b.act](x)
+                if b.se:
+                    x = L.apply_se(p["se"], x)
+                x = _pointwise(x, p["project"], bk)
             x, np_["bn2"] = L.apply_bn(p["bn2"], x, train=train)
             if b.stride == 1 and cin == b.cout:
                 x = x + shortcut

@@ -202,3 +202,66 @@ def test_stos_invariants(p, l, k):
                          PAPER_CONFIG)
     assert sim.useful_macs == p * l * k
     assert sim.utilization(PAPER_CONFIG) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fused-block pricing: the megakernel saves memory traffic, not MACs.
+#
+# The serving cost model prices a fused FuSeConv block as the SUM of its
+# decomposed parts' compute cycles — if fusion changed compute pricing,
+# SystolicCostModel would need new calibration keys and every admission
+# decision would shift.  These goldens pin that contract.
+# ---------------------------------------------------------------------------
+
+_FB_ROW = OpSpec("fuse_row", "fr", 14, 14, 120, 120, 3, 1)
+_FB_COL = OpSpec("fuse_col", "fcl", 14, 14, 120, 120, 3, 1)
+_FB_PW = OpSpec("pointwise", "pw", 14, 14, 240, 1280)
+
+
+def test_golden_fused_block_cycles():
+    """Fused block == decomposed parts in compute (333 + 333 + 297440) and
+    MACs; DRAM drops by exactly 2 x spatial-intermediate bytes."""
+    fused = df.simulate_fused_block(_FB_ROW, _FB_COL, _FB_PW, PAPER_CONFIG)
+    assert fused.compute_cycles == 333 + 333 + 297440
+    assert fused.useful_macs == 70560 + 70560 + 60211200
+    parts = [df.simulate_op(_FB_ROW, PAPER_CONFIG, dataflow="ST-OS"),
+             df.simulate_op(_FB_COL, PAPER_CONFIG, dataflow="ST-OS"),
+             df.simulate_op(_FB_PW, PAPER_CONFIG, dataflow="OS")]
+    saved = 2 * 14 * 14 * 240 * PAPER_CONFIG.bytes_per_elem
+    assert fused.dram_bytes == sum(p.dram_bytes for p in parts) - saved
+    assert fused.dram_bytes < sum(p.dram_bytes for p in parts)
+    assert fused.sram_bytes == sum(p.sram_bytes for p in parts)
+
+
+def test_fused_block_no_new_calibration_keys():
+    """compute_cycles additivity means cost-model calibration stays keyed on
+    the existing per-op kinds; no 'fuse_block' key is needed."""
+    fused = df.simulate_fused_block(_FB_ROW, _FB_COL, _FB_PW, PAPER_CONFIG,
+                                    batch=4)
+    parts_cycles = sum(
+        df.simulate_op(op, PAPER_CONFIG, dataflow=flow, batch=4).compute_cycles
+        for op, flow in [(_FB_ROW, "ST-OS"), (_FB_COL, "ST-OS"),
+                         (_FB_PW, "OS")])
+    assert fused.compute_cycles == parts_cycles
+    assert fused.kind == "fuse_block"
+
+
+@settings(max_examples=30, deadline=None)
+@given(hw=st.integers(4, 28), c=st.integers(8, 128), khalf=st.integers(1, 3),
+       cout=st.integers(8, 512))
+def test_fused_block_prices_like_decomposed(hw, c, khalf, cout):
+    """Property: for any block geometry, fusion is compute-neutral and
+    strictly DRAM-saving."""
+    k = 2 * khalf + 1                      # k in {3, 5, 7}
+    row = OpSpec("fuse_row", "r", hw, hw, c, c, k, 1)
+    col = OpSpec("fuse_col", "c", hw, hw, c, c, k, 1)
+    pw = OpSpec("pointwise", "p", hw, hw, 2 * c, cout)
+    fused = df.simulate_fused_block(row, col, pw, PAPER_CONFIG)
+    parts = [df.simulate_op(row, PAPER_CONFIG, dataflow="ST-OS"),
+             df.simulate_op(col, PAPER_CONFIG, dataflow="ST-OS"),
+             df.simulate_op(pw, PAPER_CONFIG, dataflow="OS")]
+    assert fused.compute_cycles == sum(p.compute_cycles for p in parts)
+    assert fused.useful_macs == sum(p.useful_macs for p in parts)
+    assert fused.dram_bytes == sum(p.dram_bytes for p in parts) - \
+        2 * hw * hw * 2 * c * PAPER_CONFIG.bytes_per_elem
+    assert fused.utilization(PAPER_CONFIG) <= 1.0
