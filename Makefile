@@ -9,33 +9,43 @@
 #                      speedup ratios against the committed baseline
 #                      (ratios, not absolute us, so CI runners don't flake);
 #                      writes bench_check_report.txt (a CI artifact)
+#   make restart-check — cold/warm restart gate: serve smoke twice against
+#                      one persistent compilation-cache dir; fails unless
+#                      the warm restart recompiled strictly less (and in
+#                      fact nothing); writes restart_check_report.json
 #   make docs-check  — README/docs link + layout-table check, quickstart
 #                      commands in dry-run form
 #   make lint        — ruff check with the rule set scoped in
 #                      pyproject.toml (skips with a notice when ruff is
 #                      not installed, so minimal containers can run ci)
 #   make ci          — the full PR gate: lint + test + bench-smoke +
-#                      bench-check + docs-check
+#                      bench-check + restart-check + docs-check
 #   make serve-demo  — end-to-end serving example on the Pallas backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench-check docs-check lint ci serve-demo
+.PHONY: test test-fast bench-smoke bench-check restart-check docs-check \
+	lint ci serve-demo
 
+# PYTEST_ARGS appends caller flags (CI passes --durations=25 --timeout=300)
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow" $(PYTEST_ARGS)
 
 bench-smoke:
-	$(PY) -m benchmarks.run serve serve_tenants kernels --json BENCH_serve.json
+	$(PY) -m benchmarks.run serve serve_tenants serve_restart kernels \
+		--json BENCH_serve.json
 	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
 	$(PY) -m benchmarks.run serve_sharded --json BENCH_serve.json
 
 bench-check:
 	$(PY) scripts/bench_check.py --report bench_check_report.txt
+
+restart-check:
+	$(PY) scripts/restart_check.py --report restart_check_report.json
 
 docs-check:
 	$(PY) scripts/docs_check.py
@@ -47,7 +57,7 @@ lint:
 		echo "lint: SKIP (ruff not installed — pip install ruff)"; \
 	fi
 
-ci: lint test bench-smoke bench-check docs-check
+ci: lint test bench-smoke bench-check restart-check docs-check
 
 serve-demo:
 	$(PY) examples/serve_vision.py

@@ -81,6 +81,14 @@ RATIOS = [
     ("fused_vs_decomposed", "kernels",
      "kernel.fuseconv_decomposed.b2s32c64k3",
      "kernel.fuseconv_fused.b2s32c64k3", 1.0, False),
+    # warm restart vs cold start, time-to-servable (warmup wall-ms across
+    # real process boundaries, persistent compilation cache + manifest
+    # replay on the warm side).  Floor-only: deserialization must not
+    # LOSE to compilation, but the multiple is disk/CPU-bound and varies
+    # by runner, so a baseline ratchet would flake.
+    ("warm_restart_speedup", "serve_restart",
+     "serve_restart.cold_to_servable.xla",
+     "serve_restart.warm_to_servable.xla", 1.0, False),
 ]
 
 

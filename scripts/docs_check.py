@@ -36,7 +36,8 @@ QUICKSTART_HELP = [
     [sys.executable, "-m", "benchmarks.run", "--help"],
     [sys.executable, os.path.join("examples", "serve_vision.py"), "--help"],
 ]
-QUICKSTART_MAKE = ["test", "test-fast", "bench-smoke", "docs-check", "ci"]
+QUICKSTART_MAKE = ["test", "test-fast", "bench-smoke", "restart-check",
+                   "docs-check", "ci"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

@@ -13,16 +13,24 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# pull the mesh size out of the args (0 = single device, no flag needed)
+# pull the mesh size and compilation-cache dir out of the args (0 =
+# single device, no flag; empty cache dir = no persistent cache — the
+# cache dir must reach the environment shim too so the persistence
+# floors are zeroed before jax starts)
 MESH=0
+CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-}"
 args=("$@")
 for ((i = 0; i < ${#args[@]}; i++)); do
     if [[ "${args[$i]}" == "--mesh" && $((i + 1)) -lt ${#args[@]} ]]; then
         MESH="${args[$((i + 1))]}"
     fi
+    if [[ "${args[$i]}" == "--compilation-cache-dir" \
+          && $((i + 1)) -lt ${#args[@]} ]]; then
+        CACHE_DIR="${args[$((i + 1))]}"
+    fi
 done
 
-eval "$(python - "$MESH" <<'PY'
+eval "$(python - "$MESH" "$CACHE_DIR" <<'PY'
 import os
 import shlex
 import sys
@@ -30,9 +38,13 @@ import sys
 from repro.launch.env import configure
 
 keys = ("XLA_FLAGS", "TF_CPP_MIN_LOG_LEVEL", "JAX_PLATFORMS",
-        "JAX_PLATFORM_NAME", "LIBTPU_INIT_ARGS")
+        "JAX_PLATFORM_NAME", "LIBTPU_INIT_ARGS",
+        "JAX_COMPILATION_CACHE_DIR",
+        "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS",
+        "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES")
 seed = {k: os.environ[k] for k in keys if k in os.environ}
-env = configure(int(sys.argv[1]), env=seed)
+env = configure(int(sys.argv[1]),
+                compilation_cache_dir=sys.argv[2] or None, env=seed)
 for k, v in env.items():
     print(f"export {k}={shlex.quote(v)}")
 PY

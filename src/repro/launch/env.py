@@ -23,6 +23,11 @@ the one shared implementation:
 * TPU step-marker instrumentation stays OFF by default
   (``enable_step_markers=False``); it is a trace-tool hook with a
   per-dispatch cost, only wanted under a profiler.
+* ``compilation_cache_dir`` exports ``JAX_COMPILATION_CACHE_DIR`` (plus
+  the persistence floors serving needs at zero) so jit work survives
+  process restarts — the env-var route covers child processes and tools
+  that never construct a ``ModelRegistry``; in-process the registry's
+  ``enable_compilation_cache`` applies the same knobs via jax config.
 """
 from __future__ import annotations
 
@@ -30,6 +35,15 @@ import os
 from typing import Dict, Optional
 
 _HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+ENV_CACHE_DIR = "JAX_COMPILATION_CACHE_DIR"
+# jax's persistence floors default to "only cache compiles >= 1 s":
+# serving's many small (model, bucket, group) entries would silently
+# never be written, so the env shim drops both floors to zero
+_CACHE_FLOOR_VARS = {
+    "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": "0",
+    "JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES": "-1",
+}
 
 
 def merged_xla_flags(existing: str, host_device_count: int) -> str:
@@ -46,6 +60,7 @@ def merged_xla_flags(existing: str, host_device_count: int) -> str:
 def configure(host_device_count: int = 0, *,
               platform: Optional[str] = None,
               enable_step_markers: bool = False,
+              compilation_cache_dir: Optional[str] = None,
               env: Optional[Dict[str, str]] = None) -> Dict[str, str]:
     """Prepare the process environment for a serving entry point.
 
@@ -54,8 +69,10 @@ def configure(host_device_count: int = 0, *,
     many virtual host devices — applied only when ``platform`` is cpu
     (or unset, which on this container resolves to cpu); on any real
     accelerator platform the flag is skipped rather than risk a fatal
-    unknown-flag error at backend startup.  ``env`` defaults to
-    ``os.environ`` (tests pass a dict to assert without mutating the
+    unknown-flag error at backend startup.  ``compilation_cache_dir``
+    exports the persistent-compilation-cache dir (and zeroes jax's
+    persistence floors) so jit work survives restarts.  ``env`` defaults
+    to ``os.environ`` (tests pass a dict to assert without mutating the
     process).  Returns the mapping that was mutated.
     """
     if env is None:
@@ -66,6 +83,14 @@ def configure(host_device_count: int = 0, *,
         env["XLA_FLAGS"] = merged_xla_flags(env.get("XLA_FLAGS", ""),
                                             host_device_count)
     env.setdefault("TF_CPP_MIN_LOG_LEVEL", "1")
+    if compilation_cache_dir:
+        env[ENV_CACHE_DIR] = compilation_cache_dir
+    if env.get(ENV_CACHE_DIR):
+        # explicit dir (argument or pre-exported): make sure the floors
+        # don't silently skip serving's small entries; caller-set floors
+        # win (setdefault)
+        for var, val in _CACHE_FLOOR_VARS.items():
+            env.setdefault(var, val)
     if enable_step_markers and plat == "tpu":
         # per-dispatch trace-tool hook, wanted only under a profiler —
         # and libtpu-only, so never applied off-TPU

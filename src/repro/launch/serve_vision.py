@@ -33,6 +33,13 @@ import argparse
 import dataclasses
 import json
 
+# the stock ServingEngine factory names, spelled out here so --help works
+# without importing jax (this module defers every jax-touching import
+# until after the environment is settled); create_engine re-validates at
+# runtime, so an engine registered via register_engine is still reachable
+# programmatically even though argparse only offers the stock two
+ENGINE_CHOICES = ("pipelined", "sync")
+
 
 def build_network(name: str, resolution: int = 0):
     from repro.vision import zoo
@@ -103,9 +110,26 @@ def main(argv=None):
                          " per-tenant; the snapshot gains per-class and"
                          " per-tenant latency ledgers plus the fairness"
                          " index")
+    ap.add_argument("--engine", default=None,
+                    choices=sorted(ENGINE_CHOICES),
+                    help="serving-engine implementation (the ServingEngine"
+                         " factory name; default 'pipelined', or 'sync'"
+                         " when --sync is given)")
     ap.add_argument("--sync", action="store_true",
                     help="drain synchronously on the caller's thread instead"
-                         " of the pipelined executor")
+                         " of the pipelined executor (alias for"
+                         " --engine sync)")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="persistent XLA compilation-cache directory"
+                         " (default: $JAX_COMPILATION_CACHE_DIR; unset ="
+                         " cache off).  Warmed jit entries persist here and"
+                         " a restarted process deserializes them instead of"
+                         " recompiling")
+    ap.add_argument("--warmup-manifest", default=None,
+                    help="warmup-manifest JSON path: persist the warmed"
+                         " (model, bucket, group) set on cold start and"
+                         " replay it on restart (see docs/serving_vision.md"
+                         " warm-restart runbook)")
     ap.add_argument("--max-in-flight", type=int, default=2,
                     help="pipelined executor's bound on outstanding batches")
     ap.add_argument("--warm-bursts", type=int, default=0,
@@ -117,13 +141,21 @@ def main(argv=None):
                     help="write the metrics snapshot to this path")
     args = ap.parse_args(argv)
 
+    import os
+
     import numpy as np
 
     from repro.serving.vision import (ARRIVAL_PATTERNS, LatencyCalibrator,
                                       ModelRegistry, SLO_CLASSES,
                                       SystolicCostModel, TenantSpec,
-                                      VisionServeEngine, make_tenant_trace,
+                                      create_engine, make_tenant_trace,
                                       submit_mixed_burst, submit_trace)
+
+    if args.engine and args.sync and args.engine != "sync":
+        raise SystemExit(f"--sync conflicts with --engine {args.engine}")
+    engine_name = args.engine or ("sync" if args.sync else "pipelined")
+    cache_dir = (args.compilation_cache_dir
+                 or os.environ.get("JAX_COMPILATION_CACHE_DIR") or None)
 
     tenants = []
     for entry in args.tenant or []:
@@ -152,12 +184,13 @@ def main(argv=None):
                 f"--mesh {args.mesh} needs {args.mesh} devices but only "
                 f"{len(jax.devices())} are visible; on CPU set XLA_FLAGS="
                 f"--xla_force_host_platform_device_count={args.mesh}")
-        if args.sync:
+        if engine_name == "sync":
             raise SystemExit("--mesh needs the pipelined executor; "
-                             "drop --sync")
+                             "drop --sync / --engine sync")
         mesh = make_data_mesh(args.mesh)
 
-    registry = ModelRegistry(backend=args.backend, mesh=mesh)
+    registry = ModelRegistry(backend=args.backend, mesh=mesh,
+                             compilation_cache_dir=cache_dir)
     for entry in args.models:
         name, sep, variant = entry.rpartition("/")
         if not sep or not name:
@@ -170,15 +203,15 @@ def main(argv=None):
     if not 0.0 < args.admission_quantile < 1.0:
         raise SystemExit("--admission-quantile must be in (0, 1)")
     calibrator = LatencyCalibrator(min_samples=args.min_calibration_samples)
-    engine = VisionServeEngine(
-        registry, cost_model=SystolicCostModel(
+    engine = create_engine(
+        registry, engine_name, cost_model=SystolicCostModel(
             calibrator=calibrator, n_devices=args.mesh or 1,
             round_planner=args.round_planner,
             admission_quantile=args.admission_quantile),
-        buckets=args.buckets, pipelined=not args.sync,
+        buckets=args.buckets,
         max_in_flight=args.max_in_flight, replan=args.replan,
         probe_interval_ms=args.probe_interval_ms, shed=args.shed)
-    engine.warmup()
+    engine.warmup(manifest_path=args.warmup_manifest)
 
     for i in range(args.warm_bursts):
         submit_mixed_burst(engine, args.requests, seed=args.seed + 1 + i)
@@ -210,9 +243,16 @@ def main(argv=None):
                   f"p50={stat['p50_ms']:8.2f}ms p95={stat['p95_ms']:8.2f}ms")
         print(f"shed={snap_t['shed']} "
               f"fairness={snap_t['fairness_index']:.3f}")
-    snap = engine.metrics.snapshot()
+    snap = engine.snapshot()
+    comp = snap.get("compilation", {})
+    pc = comp.get("persistent", {})
+    print(f"compile entries_built={comp.get('entries_built', 0)} "
+          f"build_ms_total={comp.get('build_ms_total', 0.0):.1f} "
+          f"pcache_hits={pc.get('hits', 0)} "
+          f"pcache_misses={pc.get('misses', 0)} "
+          f"cache_dir={comp.get('cache_dir')}")
     snap["calibration"] = calibrator.snapshot()
-    snap["mode"] = "sync" if args.sync else "pipelined"
+    snap["mode"] = engine_name
     snap["mesh_devices"] = args.mesh or 1
     snap["round_planner"] = args.round_planner
     # the engine's resolved flag, not the CLI's: replanning needs the

@@ -2,16 +2,21 @@
 
 Quick start::
 
-    from repro.serving.vision import ModelRegistry, VisionServeEngine
+    from repro.serving.vision import ModelRegistry, create_engine
     from repro.vision import zoo
 
     reg = ModelRegistry(backend="pallas")          # or "xla" / "pallas_tpu"
     reg.register(zoo.tiny_net(), "fuse_full")
-    engine = VisionServeEngine(reg)
+    engine = create_engine(reg, "pipelined")       # or "sync"
     rid = engine.submit("tiny_net/fuse_full", image)  # (H, W, 3) any size
     results = engine.flush()
 
-See docs/serving_vision.md for the architecture sketch.
+Every engine conforms to ``interface.ServingEngine`` (submit / poll /
+stream_results / warmup / snapshot / close); pass
+``ModelRegistry(compilation_cache_dir=...)`` plus
+``engine.warmup(manifest_path=...)`` to make warmed jit entries survive
+process restarts.  See docs/serving_vision.md for the architecture
+sketch and the warm-restart runbook.
 """
 from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
@@ -21,8 +26,13 @@ from repro.serving.vision.costmodel import (BucketPlan, RoundPart, RoundPlan,
                                             SystolicCostModel,
                                             power_of_two_partitions,
                                             round_groups, uneven_sizes)
+from repro.serving.vision.compilecache import (enable_compilation_cache,
+                                               persistent_cache_counters)
 from repro.serving.vision.engine import (ReadinessProbe, VisionFuture,
                                          VisionResult, VisionServeEngine)
+from repro.serving.vision.interface import (ENGINES, PipelinedVisionEngine,
+                                            ServingEngine, SyncVisionEngine,
+                                            create_engine, register_engine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
                                            default_model_key, device_groups,
@@ -41,17 +51,20 @@ from repro.serving.vision.traffic import (ARRIVAL_PATTERNS, TenantSpec,
 
 __all__ = [
     "ARRIVAL_PATTERNS", "Batch", "BucketPlan", "DEFAULT_BUCKETS",
-    "DEFAULT_CLASS", "DEFAULT_QUANTILES", "LatencyCalibrator",
-    "LatencyStat", "ModelRegistry", "P2Quantile", "QuantileSketch",
+    "DEFAULT_CLASS", "DEFAULT_QUANTILES", "ENGINES", "LatencyCalibrator",
+    "LatencyStat", "ModelRegistry", "P2Quantile", "PipelinedVisionEngine",
+    "QuantileSketch",
     "ReadinessProbe", "RegisteredModel", "RequestQueue",
     "RoundPart", "RoundPlan", "SLOClass", "SLO_CLASSES", "ServeMetrics",
-    "SystolicCostModel", "TenantSpec",
+    "ServingEngine", "SyncVisionEngine", "SystolicCostModel", "TenantSpec",
     "VisionFuture", "VisionRequest", "VisionResult", "VisionServeEngine",
-    "class_priority", "class_weight",
+    "class_priority", "class_weight", "create_engine",
     "default_model_key", "device_groups", "device_groups_sized",
+    "enable_compilation_cache",
     "fit_image", "form_batch", "form_round", "jain_fairness",
     "make_mixed_burst", "make_tenant_trace",
-    "percentile", "power_of_two_partitions", "round_groups", "slo_class",
+    "percentile", "persistent_cache_counters", "power_of_two_partitions",
+    "register_engine", "round_groups", "slo_class",
     "stream_items", "stream_mixed_burst", "submit_mixed_burst",
     "submit_trace", "uneven_sizes", "z_score",
 ]

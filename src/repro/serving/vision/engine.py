@@ -93,10 +93,13 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import json
+import os
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import (Dict, Iterator, List, Optional, Sequence, Set, Tuple,
+                    Union)
 
 import jax
 import numpy as np
@@ -105,6 +108,8 @@ from repro.serving.vision.batcher import (DEFAULT_BUCKETS, Batch,
                                           RequestQueue, VisionRequest,
                                           form_batch, form_round)
 from repro.serving.vision.calibrate import LatencyCalibrator
+from repro.serving.vision.compilecache import (counters_delta,
+                                               persistent_cache_counters)
 from repro.serving.vision.costmodel import BucketPlan, SystolicCostModel
 from repro.serving.vision.metrics import ServeMetrics
 from repro.serving.vision.registry import (ModelRegistry, device_groups,
@@ -960,16 +965,10 @@ class VisionServeEngine:
         return out
 
     # -- scheduling / execution ---------------------------------------------
-    def warmup(self, keys: Optional[Sequence[str]] = None,
-               buckets: Optional[Sequence[int]] = None) -> None:
-        """Prewarm every (model, bucket) pair off the serving path: seed the
-        cost model's simulator cache, then both pipeline stages (host batch
-        formation and device jit compile) via the registry hooks.  Under
-        the round scheduler this also warms each model's round-robin device
-        group, so the first cross-model round never compiles under
-        traffic."""
-        bks = tuple(buckets) if buckets is not None else self.buckets
-        ks = list(keys if keys is not None else self.registry.keys())
+    def _reachable_groups(self, n_models: int) -> List[tuple]:
+        """Every device group the round scheduler / replanner can ever
+        dispatch on with ``n_models`` registered models — the jit layout
+        set a process must compile before it is servable."""
         groups: List[tuple] = []
         if self.cross_model and self._devices and len(self._devices) > 1 \
                 and hasattr(self.cost_model, "plan_round"):
@@ -981,7 +980,7 @@ class VisionServeEngine:
             # under traffic
             seen = set()
             widths = {round_groups(m, len(self._devices))
-                      for m in range(1, len(ks) + 1)}
+                      for m in range(1, n_models + 1)}
             for k_groups in sorted(widths):
                 if k_groups > 1:        # full mesh is warmed by default
                     for grp in device_groups(self._devices, k_groups):
@@ -997,7 +996,7 @@ class VisionServeEngine:
                 # fewer groups than models), so one sweep covers both —
                 # and since replanning may land any model on any group,
                 # prewarm compiles every model on every warmed group.
-                for m in range(2, len(ks) + 1):
+                for m in range(2, n_models + 1):
                     for sizes in power_of_two_partitions(
                             len(self._devices), m):
                         for grp in device_groups_sized(self._devices, sizes):
@@ -1005,6 +1004,32 @@ class VisionServeEngine:
                                     and grp not in seen:
                                 seen.add(grp)
                                 groups.append(grp)
+        return groups
+
+    def warmup(self, keys: Optional[Sequence[str]] = None,
+               buckets: Optional[Sequence[int]] = None,
+               manifest_path: Optional[str] = None) -> List[tuple]:
+        """Prewarm every (model, bucket) pair off the serving path: seed the
+        cost model's simulator cache, then both pipeline stages (host batch
+        formation and device jit compile) via the registry hooks.  Under
+        the round scheduler this also warms each model's round-robin device
+        group, so the first cross-model round never compiles under
+        traffic.
+
+        ``manifest_path`` turns on manifest mode: the warmed (model,
+        bucket, device-id group) set is persisted to that JSON file —
+        stamped with the registry's backend fingerprint — and a restarted
+        process replays it instead of re-deriving the layout set, so with
+        a persistent compilation cache the restart reaches servable with
+        near-zero recompilation.  A manifest whose fingerprint does not
+        match the current backend/models is ignored (re-derived and
+        rewritten).  Returns the warmed entry list as ``(key, bucket,
+        device-id tuple | None)`` triples; warm-up wall-ms and persistent
+        cache hit/miss deltas land in the metrics snapshot."""
+        t_w0 = time.perf_counter()
+        bks = tuple(buckets) if buckets is not None else self.buckets
+        ks = list(keys if keys is not None else self.registry.keys())
+        groups = self._reachable_groups(len(ks))
         for k in ks:
             model = self.registry.get(k)
             for b in bks:
@@ -1013,7 +1038,86 @@ class VisionServeEngine:
                 # seed the sharded simulator points (per-device microbatch)
                 self.cost_model.plan_bucket(model, max(bks), bks,
                                             group_size=len(grp))
-            self.registry.prewarm(k, bks, groups=groups or None)
+        entries: Optional[List[tuple]] = None
+        replayed = False
+        if manifest_path:
+            entries = self._load_manifest(manifest_path, ks)
+            replayed = entries is not None
+        if entries is None:
+            entries = [(k, b, None) for k in ks for b in bks]
+            # stub registries in tests hand out bare ints as devices;
+            # real meshes hand out jax device objects with .id
+            entries += [(k, b, tuple(getattr(d, "id", d) for d in grp))
+                        for k in ks for grp in groups for b in bks]
+        before = persistent_cache_counters()
+        warm_entry = getattr(self.registry, "warm_entry", None)
+        if warm_entry is not None:
+            hosted = set()
+            for k, b, ids in entries:
+                devs = None
+                if ids is not None:
+                    by_id = getattr(self.registry, "devices_by_id", None)
+                    devs = by_id(ids) if by_id else None
+                    if devs is None:
+                        continue       # id set not on this mesh: skip
+                warm_entry(k, b, devices=devs, host=(k, b) not in hosted)
+                hosted.add((k, b))
+        else:
+            # duck-typed stub registries: the coarse per-model hook
+            for k in ks:
+                self.registry.prewarm(k, bks, groups=groups or None)
+        delta = counters_delta(before)
+        if manifest_path and not replayed:
+            self._write_manifest(manifest_path, entries)
+        self.metrics.on_warmup((time.perf_counter() - t_w0) * 1e3,
+                               len(entries), replayed,
+                               pcache_hits=int(delta["hits"]),
+                               pcache_misses=int(delta["misses"]))
+        return entries
+
+    def _load_manifest(self, path: str,
+                       ks: Sequence[str]) -> Optional[List[tuple]]:
+        """Entries from a warmup manifest, or None when it is missing,
+        unreadable, fingerprint-stale, or names no registered model —
+        every failure mode falls back to deriving the set fresh."""
+        fp_fn = getattr(self.registry, "backend_fingerprint", None)
+        if fp_fn is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError, ValueError):
+            return None
+        if manifest.get("fingerprint") != fp_fn():
+            return None
+        known = set(ks)
+        entries = []
+        for e in manifest.get("entries", []):
+            try:
+                k, b, ids = e[0], int(e[1]), e[2]
+            except (TypeError, ValueError, IndexError):
+                return None
+            if k in known:
+                entries.append((k, b, tuple(ids) if ids is not None else None))
+        return entries or None
+
+    def _write_manifest(self, path: str, entries: List[tuple]) -> None:
+        """Persist the warmed layout set (atomic rename; fingerprint-
+        stamped so a drifted backend/model set invalidates it)."""
+        fp_fn = getattr(self.registry, "backend_fingerprint", None)
+        if fp_fn is None:
+            return
+        data = {
+            "version": 1,
+            "fingerprint": fp_fn(),
+            "created_unix": time.time(),
+            "entries": [[k, b, list(ids) if ids is not None else None]
+                        for k, b, ids in entries],
+        }
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
 
     def step(self) -> List[VisionResult]:
         """Synchronously run ONE batch on the caller's thread (the
@@ -1029,8 +1133,16 @@ class VisionServeEngine:
         batch = form_batch(reqs, plan.bucket, model.resolution)
         self.metrics.on_stage("host", self._clock() - t_h0)
         t0 = self._clock()
-        logits = self.registry.apply(model_key, batch.images)
-        logits = jax.block_until_ready(logits)
+        try:
+            logits = self.registry.apply(model_key, batch.images)
+            logits = jax.block_until_ready(logits)
+        except Exception as exc:
+            # engine-interface conformance: a poisoned batch resolves its
+            # requests with status "error" on every engine — the pipelined
+            # device/completer threads already do this, and the sync path
+            # must not differ by leaking the exception to the caller
+            self._fail(reqs, plan, exc, in_flight=False)
+            return []
         t1 = self._clock()
         self.metrics.on_stage("device", t1 - t0)
         return self._finalize(_Prepared(batch, plan), np.asarray(logits),
@@ -1069,6 +1181,84 @@ class VisionServeEngine:
         for item in items:
             self.submit(*item)
         return self.flush()
+
+    # -- engine-interface surface (see interface.ServingEngine) ---------------
+    def poll(self, rid: int,
+             timeout_ms: float = 0.0) -> Optional[VisionResult]:
+        """The result for one request id, or None while it is pending.
+
+        Non-destructive: the result stays owned by the engine until
+        ``flush()`` collects it, so polling and flushing compose.  On the
+        pipelined engine ``timeout_ms`` bounds how long to wait for the
+        worker threads; the sync engine has no workers, so poll IS the
+        executor — it drains queued batches on the caller's thread until
+        the request resolves (both engines therefore honor the same
+        contract: after a successful poll the result is final).  Raises
+        ``KeyError`` for an id this engine never issued or whose result
+        was already handed out by ``flush()``."""
+        with self._lock:
+            fut = self._futures.get(rid)
+        if fut is None:
+            raise KeyError(f"unknown or already-flushed request id {rid}")
+        if fut.done():
+            return fut.result(0)
+        if not self.pipelined:
+            while not fut.done() and self._queue.pending():
+                self.step()
+            return fut.result(0) if fut.done() else None
+        if timeout_ms > 0:
+            try:
+                return fut.result(timeout_ms / 1e3)
+            except TimeoutError:
+                return None
+        return None
+
+    def stream_results(self, rids: Optional[Sequence[int]] = None,
+                       timeout_ms: Optional[float] = None
+                       ) -> Iterator[VisionResult]:
+        """Yield results as they complete (completion order, not
+        submission order) — the streaming consumption surface of the
+        engine interface.  ``rids`` restricts the stream to those ids
+        (default: every outstanding unflushed request); ``timeout_ms``
+        bounds the total wait on the pipelined engine (the stream simply
+        ends when it elapses).  On the sync engine the generator drains
+        queued batches on the caller's thread between yields.  Results
+        stay flushable afterwards (non-destructive, like ``poll``)."""
+        with self._lock:
+            want = list(rids) if rids is not None else sorted(self._futures)
+            pending = {r: self._futures[r] for r in want}
+        t_end = (None if timeout_ms is None
+                 else time.monotonic() + timeout_ms / 1e3)
+        while pending:
+            progressed = False
+            for rid in list(pending):
+                if pending[rid].done():
+                    fut = pending.pop(rid)
+                    progressed = True
+                    yield fut.result(0)
+            if not pending or progressed:
+                continue
+            if not self.pipelined:
+                if self._queue.pending() == 0:
+                    return             # nothing left that could resolve
+                self.step()
+                continue
+            if t_end is not None and time.monotonic() >= t_end:
+                return
+            time.sleep(0.001)
+
+    def snapshot(self) -> Dict:
+        """One self-describing dict for the whole engine: the metrics
+        snapshot plus the registry's compilation accounting (jit entries
+        built, per-entry build ms, persistent-cache hit/miss counters) —
+        what the restart CI gate and the serve launcher report."""
+        snap = self.metrics.snapshot()
+        stats = getattr(self.registry, "compile_stats", None)
+        if stats is not None:
+            comp = dict(snap.get("compilation", {}))
+            comp.update(stats())
+            snap["compilation"] = comp
+        return snap
 
     # -- shutdown -------------------------------------------------------------
     def close(self, *, drain: bool = True) -> None:

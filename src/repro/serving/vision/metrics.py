@@ -148,6 +148,15 @@ class ServeMetrics:
         self.class_e2e: Dict[str, LatencyStat] = {}
         self.tenant_e2e: Dict[str, LatencyStat] = {}
         self.tenant_completed: Dict[str, int] = {}
+        # compilation / warm restart: cold-start-to-servable is dominated
+        # by warmup's jit compiles, so the warmup pass reports its wall-ms
+        # and the persistent-cache hit/miss delta it observed (a miss is
+        # an actual XLA compile; a warm restart should see ~only hits)
+        self.warmup_ms = 0.0
+        self.warmup_entries = 0
+        self.warmup_manifest_replayed = False
+        self.warmup_pcache_hits = 0
+        self.warmup_pcache_misses = 0
 
     def reset(self) -> None:
         """Zero every counter/distribution (e.g. after warm-up traffic so a
@@ -205,6 +214,19 @@ class ServeMetrics:
                 self._stat(self.tenant_e2e, tenant).record(e2e_ms)
                 self.tenant_completed[tenant] = \
                     self.tenant_completed.get(tenant, 0) + 1
+
+    def on_warmup(self, ms: float, entries: int, manifest_replayed: bool,
+                  *, pcache_hits: int = 0, pcache_misses: int = 0) -> None:
+        """One warmup pass finished: ``entries`` (model, bucket, group)
+        jit entries warmed in ``ms`` wall-ms, observing the given
+        persistent-compilation-cache hit/miss delta.  Cumulative across
+        passes (warmup may be re-run after registering models)."""
+        with self._lock:
+            self.warmup_ms += ms
+            self.warmup_entries += entries
+            self.warmup_manifest_replayed = bool(manifest_replayed)
+            self.warmup_pcache_hits += int(pcache_hits)
+            self.warmup_pcache_misses += int(pcache_misses)
 
     def on_shed(self, slo_class: str) -> None:
         """One queued request shed at admission time to make room for a
@@ -348,6 +370,13 @@ class ServeMetrics:
                 "tenant_completed": dict(self.tenant_completed),
                 "fairness_index": _jain(
                     list(self.tenant_completed.values())),
+                "compilation": {
+                    "warmup_ms": self.warmup_ms,
+                    "warmup_entries": self.warmup_entries,
+                    "manifest_replayed": self.warmup_manifest_replayed,
+                    "warmup_pcache_hits": self.warmup_pcache_hits,
+                    "warmup_pcache_misses": self.warmup_pcache_misses,
+                },
                 "max_in_flight": self.max_in_flight,
                 "host_busy_s": self.host_busy_s,
                 "device_busy_s": self.device_busy_s,

@@ -19,12 +19,27 @@ round scheduler's handful of power-of-two contiguous groups each compile
 exactly once.  Testable on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
-All latencies around this module are wall-clock; the registry itself does
-no timing.
+Restarts: constructed with ``compilation_cache_dir`` (or with
+``JAX_COMPILATION_CACHE_DIR`` exported), the registry points jax's
+persistent compilation cache at that directory (persistence floors
+zeroed — see ``compilecache.py``) so every jit entry built here is
+written to disk and a restarted process deserializes instead of
+recompiling.  The registry also accounts for compilation: the first call
+of each jit entry is timed into a compile log, persistent-cache hit/miss
+deltas (exact, from jax's monitoring events) are attached per entry, and
+``compile_stats()`` hands the whole ledger to ``engine.snapshot()`` and
+the cold/warm restart CI gate.
+
+All other latencies around this module are wall-clock; beyond the compile
+log the registry does no timing.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -34,6 +49,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.layerir import OpSpec
 from repro.kernels import backend as kb
+from repro.serving.vision.compilecache import (counters_delta,
+                                               enable_compilation_cache,
+                                               persistent_cache_counters)
 from repro.vision import zoo
 
 
@@ -90,7 +108,7 @@ class ModelRegistry:
     """Servable models + the (key, bucket[, device group]) -> jit cache."""
 
     def __init__(self, backend: Union[str, kb.Backend, None] = None,
-                 mesh=None):
+                 mesh=None, compilation_cache_dir: Optional[str] = None):
         self.backend = kb.resolve_backend(backend)
         self.mesh = mesh
         if mesh is not None:
@@ -99,10 +117,24 @@ class ModelRegistry:
                 np.asarray(mesh.devices).flatten().tolist())
         else:
             self.devices = None
+        # persistent compilation cache: explicit dir > the
+        # JAX_COMPILATION_CACHE_DIR environment variable > off.  Enabled
+        # here, at construction, so every jit entry this registry ever
+        # builds is persisted (and restart-replayable)
+        self.compilation_cache_dir = enable_compilation_cache(
+            compilation_cache_dir)
         self._models: Dict[str, RegisteredModel] = {}
         self._jit: Dict[tuple, Callable] = {}
         self._group_meshes: Dict[Tuple[int, ...], Mesh] = {}
         self._placed_params: Dict[Tuple[str, Tuple[int, ...]], list] = {}
+        # per-entry compile log: one record per jit cache entry built by
+        # THIS process, with the entry's build wall-ms and the persistent
+        # cache hit/miss delta observed while it was built (warm restarts
+        # should see hits, cold starts misses).  Written under a lock —
+        # warmup, the scheduler, and replanning can all build entries.
+        self._compile_lock = threading.Lock()
+        self._compile_log: List[Dict] = []
+        self._called: set = set()      # cache keys whose first call was logged
 
     @property
     def n_devices(self) -> int:
@@ -161,6 +193,34 @@ class ModelRegistry:
             self._jit[cache_key] = self._build_apply(self._models[key])
         return self._jit[cache_key]
 
+    def _call_entry(self, cache_key: tuple, fn: Callable, params,
+                    x) -> jax.Array:
+        """Invoke a jit entry; the FIRST call per cache key is timed and
+        logged (tracing + XLA compile happen inside it — with a persistent
+        cache hit the same call deserializes from disk instead, and the
+        hit/miss delta captured around it records which one happened)."""
+        with self._compile_lock:
+            fresh = cache_key not in self._called
+            if fresh:
+                self._called.add(cache_key)
+        if not fresh:
+            return fn(params, x)
+        before = persistent_cache_counters()
+        t0 = time.perf_counter()
+        out = fn(params, x)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        delta = counters_delta(before)
+        with self._compile_lock:
+            self._compile_log.append({
+                "entry": cache_key,
+                "key": cache_key[0], "bucket": cache_key[1],
+                "devices": list(cache_key[2]) if len(cache_key) > 2 else None,
+                "build_ms": build_ms,
+                "pcache_hits": int(delta["hits"]),
+                "pcache_misses": int(delta["misses"]),
+            })
+        return out
+
     def _group_mesh(self, devices: tuple) -> Mesh:
         ids = tuple(d.id for d in devices)
         if ids not in self._group_meshes:
@@ -191,7 +251,9 @@ class ModelRegistry:
         x = jnp.asarray(images)
         bucket = x.shape[0]
         if devices is None and self.devices is None:
-            return self.apply_fn(key, bucket)(model.params, x)
+            return self._call_entry((key, bucket),
+                                    self.apply_fn(key, bucket),
+                                    model.params, x)
         devs = tuple(devices) if devices is not None else self.devices
         gmesh = self._group_mesh(devs)
         ids = tuple(d.id for d in devs)
@@ -201,7 +263,7 @@ class ModelRegistry:
         cache_key = (key, bucket, ids)
         if cache_key not in self._jit:
             self._jit[cache_key] = self._build_apply(model)
-        return self._jit[cache_key](params, x)
+        return self._call_entry(cache_key, self._jit[cache_key], params, x)
 
     def is_compiled(self, key: str, bucket: int,
                     devices: Optional[Sequence] = None) -> bool:
@@ -239,10 +301,77 @@ class ModelRegistry:
             targets = [None] + [tuple(g) for g in (groups or [])]
             for devs in targets:
                 for b in buckets:
-                    out = self.apply(key, np.zeros((b, res, res, cin),
-                                                   np.float32),
-                                     devices=devs)
-                    jax.block_until_ready(out)
+                    self.warm_entry(key, b, devices=devs, host=False)
+
+    def warm_entry(self, key: str, bucket: int,
+                   devices: Optional[Sequence] = None, *,
+                   host: bool = True) -> None:
+        """Warm exactly ONE (model, bucket[, device group]) jit entry: run
+        the bucket-shaped apply once and block.  With the persistent
+        compilation cache enabled this either compiles-and-persists (cold)
+        or deserializes from disk (warm) — either way the entry is hot for
+        traffic afterwards.  ``host=True`` also exercises batch formation
+        for the bucket (the manifest replay path warms per entry, so the
+        host side must ride along)."""
+        model = self._models[key]
+        res, cin = model.resolution, model.net.in_channels
+        if host:
+            from repro.serving.vision.batcher import (VisionRequest,
+                                                      form_batch)
+            img = np.zeros((res // 2 or 1, res + 1, cin), np.float32)
+            form_batch([VisionRequest(-1, key, img, 0.0)], bucket, res)
+        out = self.apply(key, np.zeros((bucket, res, res, cin), np.float32),
+                         devices=tuple(devices) if devices else None)
+        jax.block_until_ready(out)
+
+    def devices_by_id(self, ids: Sequence[int]) -> Optional[tuple]:
+        """Map persisted device ids back to this process's device objects
+        (manifest entries store ids — device objects don't survive a
+        restart).  None when any id is not on the current mesh."""
+        pool = {d.id: d for d in (self.devices or ())}
+        try:
+            return tuple(pool[i] for i in ids)
+        except KeyError:
+            return None
+
+    def backend_fingerprint(self) -> str:
+        """Stable hash of everything that invalidates persisted compile
+        work: jax/jaxlib versions, platform, backend key, mesh shape, and
+        the registered model set (key, variant, resolution, depth).  A
+        warmup manifest recorded under a different fingerprint is stale —
+        replaying it would warm the wrong entries (or hit nothing)."""
+        import jaxlib
+        ident = {
+            "jax": jax.__version__,
+            "jaxlib": getattr(jaxlib, "__version__", "?"),
+            "platform": jax.default_backend(),
+            "backend": getattr(self.backend, "key", str(self.backend)),
+            "n_devices": self.n_devices,
+            "models": sorted(
+                (k, str(m.variant), m.resolution, len(m.net.blocks))
+                for k, m in self._models.items()),
+        }
+        blob = json.dumps(ident, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    def compile_stats(self) -> Dict:
+        """Per-process compilation accounting: jit entries built, their
+        per-entry build wall-ms (first-call trace+compile — or persistent-
+        cache deserialize), and the process-wide persistent cache
+        hit/miss counters.  The cold/warm restart gate diffs ``persistent
+        ["misses"]`` across two processes sharing a cache dir."""
+        with self._compile_lock:
+            log = [dict(e) for e in self._compile_log]
+        for e in log:
+            e.pop("entry", None)       # tuple key, not JSON-serializable
+        return {
+            "cache_dir": self.compilation_cache_dir,
+            "jit_entries": len(self._jit),
+            "entries_built": len(log),
+            "build_ms_total": sum(e["build_ms"] for e in log),
+            "persistent": persistent_cache_counters(),
+            "compile_log": log,
+        }
 
     def compiled_buckets(self) -> List[tuple]:
         return sorted(self._jit, key=lambda k: (k[0], k[1], len(k)))

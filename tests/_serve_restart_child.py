@@ -1,0 +1,74 @@
+"""Subprocess child for tests/test_serve_restart.py.
+
+The persistent compilation cache only proves itself across PROCESS
+boundaries — the parent pytest process has a long-lived jax with its own
+in-memory jit cache, so a cold/warm restart has to be two fresh
+processes pointed at the same cache directory.  This child is one such
+process: it enables the cache (before jax initializes), builds a serving
+engine, warms up through the manifest, serves one deterministic burst,
+and prints one JSON dict on the last stdout line with the compilation
+accounting and a digest of every logit tensor.  The parent runs it twice
+and asserts the warm run recompiled nothing and produced bitwise-
+identical outputs.
+
+argv: <cache_dir> <manifest_path> <engine_name>
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# the shared entry-point environment shim: exports the cache dir and
+# zeroes the persistence floors BEFORE anything imports jax
+from repro.launch.env import configure  # noqa: E402
+
+configure(compilation_cache_dir=sys.argv[1])
+
+import hashlib  # noqa: E402
+import json  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+
+def main() -> None:
+    manifest_path = sys.argv[2]
+    engine_name = sys.argv[3] if len(sys.argv) > 3 else "sync"
+
+    from repro.serving.vision import (ModelRegistry, create_engine,
+                                      make_mixed_burst)
+    from repro.vision import zoo
+
+    registry = ModelRegistry(backend="xla",
+                             compilation_cache_dir=sys.argv[1])
+    registry.register(zoo.tiny_net(resolution=16, width=8), "fuse_full")
+    engine = create_engine(registry, engine_name, buckets=(1, 2, 4))
+    entries = engine.warmup(manifest_path=manifest_path)
+    snap_warm = engine.snapshot()
+
+    items = make_mixed_burst(registry, 6, seed=3)
+    rids = [engine.submit(k, img) for k, img in items]
+    results = {r.rid: r for r in engine.flush()}
+    digest = hashlib.sha256()
+    for rid in rids:
+        digest.update(results[rid].logits.tobytes())
+    snap = engine.snapshot()
+    engine.close()
+
+    comp = snap["compilation"]
+    print(json.dumps({
+        "engine": engine_name,
+        "warmup_entries": len(entries),
+        "manifest_replayed": snap_warm["compilation"]["manifest_replayed"],
+        "warmup_pcache_hits": comp["warmup_pcache_hits"],
+        "warmup_pcache_misses": comp["warmup_pcache_misses"],
+        "pcache_hits": comp["persistent"]["hits"],
+        "pcache_misses": comp["persistent"]["misses"],
+        "entries_built": comp["entries_built"],
+        "build_ms_total": comp["build_ms_total"],
+        "statuses": sorted({results[rid].status for rid in rids}),
+        "logits_sha256": digest.hexdigest(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Cold/warm restart acceptance for the persistent compilation cache.
+
+The whole point of wiring ``jax.experimental.compilation_cache`` plus the
+warmup manifest is that a RESTARTED serving process recompiles (almost)
+nothing: every jit entry deserializes from the on-disk cache and the
+manifest replays the exact (model, bucket, group) set without re-deriving
+it.  In-process tests cannot see this — jax's in-memory jit cache would
+mask everything — so the check is two fresh subprocesses
+(``tests/_serve_restart_child.py``) sharing one temp cache directory:
+
+* cold: empty cache dir — every warmed entry is a persistent-cache miss
+  (a real XLA compile), and the manifest is written;
+* warm: same dir — the manifest replays, every lookup is a hit, and the
+  miss counter (actual compiles) stays at zero;
+* both runs serve the same deterministic burst and must produce
+  bitwise-identical logits (same sha256 over every result tensor).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(cache_dir, manifest, engine="sync"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    # the child enables the cache itself; scrub any ambient override
+    env.pop("JAX_COMPILATION_CACHE_DIR", None)
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "_serve_restart_child.py"),
+         str(cache_dir), str(manifest), engine],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-4000:])
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.fixture(scope="module")
+def restart_pair(tmp_path_factory):
+    base = tmp_path_factory.mktemp("restart")
+    cache_dir = base / "jax_cache"
+    manifest = base / "warmup_manifest.json"
+    cold = _run_child(cache_dir, manifest)
+    warm = _run_child(cache_dir, manifest)
+    return cold, warm
+
+
+def test_cold_run_compiles_and_writes_manifest(restart_pair, tmp_path):
+    cold, _ = restart_pair
+    assert cold["manifest_replayed"] is False
+    assert cold["warmup_entries"] > 0
+    # an empty cache dir means every persistent lookup missed — i.e. real
+    # XLA compiles happened and were written out
+    assert cold["pcache_misses"] > 0
+    assert cold["warmup_pcache_misses"] > 0
+    assert cold["statuses"] == ["ok"]
+
+
+def test_warm_restart_recompiles_nothing(restart_pair):
+    """Acceptance: restarted process + same cache dir + manifest replay =>
+    zero persistent-cache misses (a miss is an actual XLA compile)."""
+    cold, warm = restart_pair
+    assert warm["manifest_replayed"] is True
+    assert warm["warmup_entries"] == cold["warmup_entries"]
+    assert warm["pcache_misses"] == 0
+    assert warm["warmup_pcache_misses"] == 0
+    # and the warm process actually exercised the cache, not nothing
+    assert warm["pcache_hits"] >= cold["pcache_misses"]
+    assert warm["statuses"] == ["ok"]
+
+
+def test_warm_restart_outputs_bitwise_identical(restart_pair):
+    cold, warm = restart_pair
+    assert cold["logits_sha256"] == warm["logits_sha256"]
+
+
+def test_warm_restart_strictly_cheaper(restart_pair):
+    """The warm run's wall-clock spent building jit entries must beat the
+    cold run's — deserialization vs compilation.  Kept loose (strictly
+    lower, not a ratio) because CI wall-clock is noisy."""
+    cold, warm = restart_pair
+    assert warm["build_ms_total"] < cold["build_ms_total"]
+
+
+def test_manifest_file_shape(restart_pair, tmp_path_factory):
+    # the fixture wrote the manifest in its module tmp dir; re-derive it
+    base = tmp_path_factory.getbasetemp()
+    found = list(base.glob("restart*/warmup_manifest.json"))
+    assert found, f"manifest not written under {base}"
+    doc = json.loads(found[0].read_text())
+    assert doc["version"] == 1
+    assert doc["fingerprint"]
+    assert doc["entries"], "manifest must persist the warmed entry set"
+    for entry in doc["entries"]:
+        key, bucket, devices = entry
+        assert isinstance(key, str) and isinstance(bucket, int)
