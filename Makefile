@@ -13,20 +13,26 @@
 #                      one persistent compilation-cache dir; fails unless
 #                      the warm restart recompiled strictly less (and in
 #                      fact nothing); writes restart_check_report.json
+#   make multiprocess-check — 2-process serving mesh gate: coordinator +
+#                      late-joining worker must agree on the mesh, match a
+#                      single-process engine's logits bitwise, and warm the
+#                      worker with zero persistent-cache misses; writes
+#                      multiprocess_check_report.json
 #   make docs-check  — README/docs link + layout-table check, quickstart
 #                      commands in dry-run form
 #   make lint        — ruff check with the rule set scoped in
 #                      pyproject.toml (skips with a notice when ruff is
 #                      not installed, so minimal containers can run ci)
 #   make ci          — the full PR gate: lint + test + bench-smoke +
-#                      bench-check + restart-check + docs-check
+#                      bench-check + restart-check + multiprocess-check +
+#                      docs-check
 #   make serve-demo  — end-to-end serving example on the Pallas backend
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-smoke bench-check restart-check docs-check \
-	lint ci serve-demo
+.PHONY: test test-fast bench-smoke bench-check restart-check \
+	multiprocess-check docs-check lint ci serve-demo
 
 # PYTEST_ARGS appends caller flags (CI passes --durations=25 --timeout=300)
 test:
@@ -36,8 +42,8 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow" $(PYTEST_ARGS)
 
 bench-smoke:
-	$(PY) -m benchmarks.run serve serve_tenants serve_restart kernels \
-		--json BENCH_serve.json
+	$(PY) -m benchmarks.run serve serve_tenants serve_restart \
+		serve_multiprocess kernels --json BENCH_serve.json
 	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
 	$(PY) -m benchmarks.run serve_sharded --json BENCH_serve.json
 
@@ -46,6 +52,10 @@ bench-check:
 
 restart-check:
 	$(PY) scripts/restart_check.py --report restart_check_report.json
+
+multiprocess-check:
+	$(PY) scripts/multiprocess_check.py \
+		--report multiprocess_check_report.json
 
 docs-check:
 	$(PY) scripts/docs_check.py
@@ -57,7 +67,8 @@ lint:
 		echo "lint: SKIP (ruff not installed — pip install ruff)"; \
 	fi
 
-ci: lint test bench-smoke bench-check restart-check docs-check
+ci: lint test bench-smoke bench-check restart-check multiprocess-check \
+	docs-check
 
 serve-demo:
 	$(PY) examples/serve_vision.py

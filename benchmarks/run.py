@@ -19,8 +19,9 @@ import os
 
 from benchmarks import (common, fig8_latency, fig9_operators,
                         fig10_utilization, fig11_bandwidth, kernels_micro,
-                        roofline, serve_restart, serve_vision,
-                        table2_overheads, table3_macs_params, table4_nas)
+                        roofline, serve_multiprocess, serve_restart,
+                        serve_vision, table2_overheads, table3_macs_params,
+                        table4_nas)
 
 SUITES = {
     "table2": table2_overheads.run,
@@ -36,6 +37,7 @@ SUITES = {
     "serve_sharded": serve_vision.run_sharded,
     "serve_tenants": serve_vision.run_tenants,
     "serve_restart": serve_restart.run,
+    "serve_multiprocess": serve_multiprocess.run,
 }
 
 

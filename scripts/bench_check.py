@@ -89,6 +89,15 @@ RATIOS = [
     ("warm_restart_speedup", "serve_restart",
      "serve_restart.cold_to_servable.xla",
      "serve_restart.warm_to_servable.xla", 1.0, False),
+    # 2-process mesh vs single process, served throughput.  The CPU smoke
+    # rig prices the cross-process control plane (KV-store round
+    # broadcasts + shard gathers) against tiny batches, so two-process is
+    # NOT expected to win — the floor is a collapse detector (the mesh
+    # must stay within 5x of single-process before tolerance), not a
+    # scaling ratchet.  Real scaling needs real accelerators.
+    ("multiprocess_vs_single", "serve_multiprocess",
+     "serve_multiprocess.single_process.xla",
+     "serve_multiprocess.two_process.xla", 0.2, False),
 ]
 
 

@@ -37,7 +37,7 @@ QUICKSTART_HELP = [
     [sys.executable, os.path.join("examples", "serve_vision.py"), "--help"],
 ]
 QUICKSTART_MAKE = ["test", "test-fast", "bench-smoke", "restart-check",
-                   "docs-check", "ci"]
+                   "multiprocess-check", "docs-check", "ci"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

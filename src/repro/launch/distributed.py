@@ -1,0 +1,203 @@
+"""Shared multi-process initialization for training and serving.
+
+Both ``launch/train.py --distributed`` and the multi-process serving
+launcher resolve their topology here: coordinator address, process id,
+and process count come from flags or environment (``JAX_COORDINATOR_ADDRESS``
+— jax's own variable — plus ``REPRO_PROCESS_ID`` / ``REPRO_NUM_PROCESSES``),
+are validated with readable errors *before* any jax state is touched, and
+then feed exactly one of two initialization modes:
+
+* ``mode="global"`` — the classic ``jax.distributed.initialize`` path for
+  training: every process sees the union of all processes' devices and
+  collectives span them.  Must run before the first backend touch.
+* ``mode="coordination"`` — the serving path.  The local backend is
+  initialized FIRST (so every process keeps its local device ids 0..N-1,
+  which on CPU are baked into persistent-compilation-cache keys), and only
+  the distributed *coordination service* (key-value store + barriers) is
+  brought up, via the runtime's low-level state object.  Processes compile
+  identical per-stripe programs against identical local device ids, so a
+  worker warming from the shared cache dir gets pure hits against entries
+  the coordinator wrote — the property the multiprocess CI gate asserts.
+  Compute stays process-local; cross-process rounds are coordinated
+  through the KV store, not through global collectives.
+
+Like :mod:`repro.launch.env`, importing this module never imports jax;
+spec resolution is usable (and unit-testable) without a backend.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional
+
+ENV_COORDINATOR = "JAX_COORDINATOR_ADDRESS"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+
+class DistributedConfigError(ValueError):
+    """Raised when the coordinator/process topology is missing or
+    inconsistent.  The message always says which flag/env var to set."""
+
+
+@dataclass(frozen=True)
+class DistributedSpec:
+    """A validated multi-process topology: who coordinates, how many
+    processes participate, and which one this is."""
+
+    coordinator_address: str
+    num_processes: int
+    process_id: int
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+    def env_exports(self) -> Dict[str, str]:
+        """The env-var form of this spec (what ``env.configure`` exports
+        so child processes resolve the same topology)."""
+        return {
+            ENV_COORDINATOR: self.coordinator_address,
+            ENV_NUM_PROCESSES: str(self.num_processes),
+            ENV_PROCESS_ID: str(self.process_id),
+        }
+
+
+def _parse_int(value, name: str) -> int:
+    try:
+        return int(value)
+    except (TypeError, ValueError):
+        raise DistributedConfigError(
+            f"{name} must be an integer, got {value!r}") from None
+
+
+def resolve_spec(coordinator_address: Optional[str] = None,
+                 num_processes: Optional[int] = None,
+                 process_id: Optional[int] = None,
+                 env: Optional[Mapping[str, str]] = None) -> DistributedSpec:
+    """Merge explicit values with the environment into a validated spec.
+
+    Explicit arguments win over env vars (``JAX_COORDINATOR_ADDRESS``,
+    ``REPRO_NUM_PROCESSES``, ``REPRO_PROCESS_ID``).  Raises
+    :class:`DistributedConfigError` with an actionable message when the
+    topology is missing a piece or internally inconsistent — the fail-fast
+    behavior ``train.py --distributed`` previously lacked.
+    """
+    if env is None:
+        env = os.environ
+    addr = coordinator_address or env.get(ENV_COORDINATOR)
+    if not addr:
+        raise DistributedConfigError(
+            "no coordinator address: pass --coordinator HOST:PORT or set "
+            f"{ENV_COORDINATOR}")
+    if ":" not in addr or not addr.rsplit(":", 1)[1].isdigit():
+        raise DistributedConfigError(
+            f"coordinator address {addr!r} is not HOST:PORT")
+    if num_processes is None:
+        raw = env.get(ENV_NUM_PROCESSES)
+        if raw is None:
+            raise DistributedConfigError(
+                "process count unknown: pass --num-processes or set "
+                f"{ENV_NUM_PROCESSES}")
+        num_processes = _parse_int(raw, ENV_NUM_PROCESSES)
+    if process_id is None:
+        raw = env.get(ENV_PROCESS_ID)
+        if raw is None:
+            raise DistributedConfigError(
+                "process id unknown: pass --process-id or set "
+                f"{ENV_PROCESS_ID}")
+        process_id = _parse_int(raw, ENV_PROCESS_ID)
+    num_processes = _parse_int(num_processes, "num_processes")
+    process_id = _parse_int(process_id, "process_id")
+    if num_processes < 1:
+        raise DistributedConfigError(
+            f"num_processes must be >= 1, got {num_processes}")
+    if not 0 <= process_id < num_processes:
+        raise DistributedConfigError(
+            f"process_id {process_id} out of range for "
+            f"num_processes={num_processes} (want 0..{num_processes - 1})")
+    return DistributedSpec(coordinator_address=addr,
+                           num_processes=num_processes,
+                           process_id=process_id)
+
+
+class CoordinationClient:
+    """Thin wrapper over the jax distributed-coordination KV/barrier
+    client: namespaced keys, uniform timeouts, and a place to keep the
+    spec.  Compute never goes through this object — it moves only small
+    control-plane payloads (round specs, logit shards, warmup manifests).
+    """
+
+    def __init__(self, client, spec: DistributedSpec,
+                 namespace: str = "repro"):
+        self._client = client
+        self.spec = spec
+        self._ns = namespace
+
+    def _key(self, key: str) -> str:
+        return f"{self._ns}/{key}"
+
+    def set(self, key: str, value: str) -> None:
+        self._client.key_value_set(self._key(key), value)
+
+    def get(self, key: str, timeout_ms: int = 60_000) -> str:
+        return self._client.blocking_key_value_get(self._key(key),
+                                                   timeout_ms)
+
+    def barrier(self, name: str, timeout_ms: int = 60_000) -> None:
+        self._client.wait_at_barrier(self._key(name), timeout_ms)
+
+
+def initialize_distributed(spec: DistributedSpec, *,
+                           mode: str = "global"):
+    """Bring up the distributed runtime per ``spec``.
+
+    ``mode="global"`` wraps ``jax.distributed.initialize`` (training:
+    global devices, cross-process collectives) and returns None.
+    ``mode="coordination"`` initializes the local backend first, then
+    connects only the coordination service, and returns a
+    :class:`CoordinationClient`.  Single-process specs return None in
+    either mode — callers degrade to the non-distributed path.
+    """
+    if mode not in ("global", "coordination"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if spec.num_processes == 1:
+        return None
+    import jax
+
+    if mode == "global":
+        from jax._src import xla_bridge
+        if xla_bridge.backends_are_initialized():
+            raise DistributedConfigError(
+                "mode='global' must run before jax backends initialize "
+                "(import order bug: something touched jax.devices() first)")
+        jax.distributed.initialize(
+            coordinator_address=spec.coordinator_address,
+            num_processes=spec.num_processes,
+            process_id=spec.process_id)
+        return None
+
+    # coordination mode: local backend FIRST so local device ids stay
+    # 0..N-1 on every process (identical persistent-cache keys), then the
+    # coordination service only.  cluster_detection_method="deactivate"
+    # skips cluster auto-detection, which would fight the explicit spec.
+    jax.devices()
+    from jax._src import distributed as _dist
+    if _dist.global_state.client is None:
+        _dist.global_state.initialize(
+            coordinator_address=spec.coordinator_address,
+            num_processes=spec.num_processes,
+            process_id=spec.process_id,
+            cluster_detection_method="deactivate")
+    client = _dist.global_state.client
+    if client is None:  # pragma: no cover - defensive
+        raise DistributedConfigError(
+            "distributed coordination service failed to initialize")
+    return CoordinationClient(client, spec)
+
+
+def shutdown_distributed() -> None:
+    """Tear down the distributed runtime if it is up (idempotent)."""
+    from jax._src import distributed as _dist
+    if _dist.global_state.client is not None:
+        _dist.global_state.shutdown()

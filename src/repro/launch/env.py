@@ -28,6 +28,11 @@ the one shared implementation:
   process restarts — the env-var route covers child processes and tools
   that never construct a ``ModelRegistry``; in-process the registry's
   ``enable_compilation_cache`` applies the same knobs via jax config.
+* multi-process topology (``coordinator_address`` / ``num_processes`` /
+  ``process_id``) exports the variables ``repro.launch.distributed``
+  resolves (``JAX_COORDINATOR_ADDRESS``, ``REPRO_NUM_PROCESSES``,
+  ``REPRO_PROCESS_ID``) so spawned worker children join the same mesh
+  without re-plumbing flags.
 """
 from __future__ import annotations
 
@@ -37,6 +42,9 @@ from typing import Dict, Optional
 _HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
 
 ENV_CACHE_DIR = "JAX_COMPILATION_CACHE_DIR"
+ENV_COORDINATOR = "JAX_COORDINATOR_ADDRESS"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
 # jax's persistence floors default to "only cache compiles >= 1 s":
 # serving's many small (model, bucket, group) entries would silently
 # never be written, so the env shim drops both floors to zero
@@ -61,6 +69,9 @@ def configure(host_device_count: int = 0, *,
               platform: Optional[str] = None,
               enable_step_markers: bool = False,
               compilation_cache_dir: Optional[str] = None,
+              coordinator_address: Optional[str] = None,
+              num_processes: Optional[int] = None,
+              process_id: Optional[int] = None,
               env: Optional[Dict[str, str]] = None) -> Dict[str, str]:
     """Prepare the process environment for a serving entry point.
 
@@ -71,12 +82,21 @@ def configure(host_device_count: int = 0, *,
     accelerator platform the flag is skipped rather than risk a fatal
     unknown-flag error at backend startup.  ``compilation_cache_dir``
     exports the persistent-compilation-cache dir (and zeroes jax's
-    persistence floors) so jit work survives restarts.  ``env`` defaults
+    persistence floors) so jit work survives restarts.  The multi-process
+    topology trio exports the variables ``launch.distributed`` resolves,
+    so a spawned child process (the sharded/multiprocess test children,
+    worker launchers) inherits the full mesh context.  ``env`` defaults
     to ``os.environ`` (tests pass a dict to assert without mutating the
     process).  Returns the mapping that was mutated.
     """
     if env is None:
         env = os.environ  # type: ignore[assignment]
+    if coordinator_address:
+        env[ENV_COORDINATOR] = coordinator_address
+    if num_processes is not None:
+        env[ENV_NUM_PROCESSES] = str(num_processes)
+    if process_id is not None:
+        env[ENV_PROCESS_ID] = str(process_id)
     plat = (platform or env.get("JAX_PLATFORMS")
             or env.get("JAX_PLATFORM_NAME") or "cpu").split(",")[0].lower()
     if host_device_count > 0 and plat == "cpu":

@@ -26,11 +26,22 @@ even split), ``--replan`` turns on mid-flight backfilling of device groups
 predicted to finish early, and ``--admission-quantile`` the latency
 quantile SLO admission reasons at (default p95; 0.5 reproduces the
 historical mean-based admit).
+
+Multi-process data parallelism: give every process the same command plus
+``--coordinator HOST:PORT --num-processes P --process-id I`` (or the
+``JAX_COORDINATOR_ADDRESS`` / ``REPRO_NUM_PROCESSES`` /
+``REPRO_PROCESS_ID`` environment trio).  ``--mesh`` then counts *local*
+devices per process and rounds plan over the ``mesh x num-processes``
+logical universe; process 0 runs the scheduler and traffic, every other
+process runs the worker follower loop (no engine, no flags beyond the
+model set) and reports its stripe/warm-join accounting as its snapshot.
+See docs/serving_vision.md for the 2-process bring-up runbook.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
 
 # the stock ServingEngine factory names, spelled out here so --help works
@@ -39,6 +50,38 @@ import json
 # runtime, so an engine registered via register_engine is still reachable
 # programmatically even though argparse only offers the stock two
 ENGINE_CHOICES = ("pipelined", "sync")
+
+
+def run_worker_process(args, spec, client, mp_mesh, registry, cache_dir):
+    """Worker (process id > 0) service loop: no engine, no traffic — the
+    process publishes its mesh fingerprint, follows the coordinator's
+    message channel (warmup broadcast, round specs, stop sentinel), and
+    reports the accounting the multiprocess CI gate reads: stripe
+    executions plus the persistent-cache counters proving its warm join
+    recompiled nothing."""
+    from repro.serving.vision import (persistent_cache_counters,
+                                      publish_mesh_fingerprint, run_worker)
+    fp = publish_mesh_fingerprint(client, mp_mesh)
+    stats = run_worker(client, mp_mesh, registry)
+    pc = persistent_cache_counters()
+    snap = {
+        "mode": "worker",
+        "process_id": spec.process_id,
+        "num_processes": spec.num_processes,
+        "mesh_fingerprint": fp,
+        "mesh_devices": mp_mesh.global_size,
+        "local_devices": mp_mesh.n_local,
+        "worker": stats,
+        "compilation": {"cache_dir": cache_dir, "persistent": pc},
+    }
+    print(f"worker {spec.process_id}/{spec.num_processes} "
+          f"rounds={stats['rounds_seen']} parts={stats['parts_executed']} "
+          f"warmed={stats['warmup_entries_warmed']} "
+          f"pcache_hits={pc['hits']} pcache_misses={pc['misses']}")
+    print(json.dumps(snap, indent=2, sort_keys=True))
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
 
 
 def build_network(name: str, resolution: int = 0):
@@ -66,7 +109,20 @@ def main(argv=None):
                     help="shard serving over this many devices (1-D data"
                          " mesh + cross-model round scheduler; 0 = off)."
                          " On CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N first")
+                         "--xla_force_host_platform_device_count=N first."
+                         " With --num-processes this counts LOCAL devices"
+                         " per process; rounds plan over the"
+                         " mesh x num-processes logical universe")
+    ap.add_argument("--coordinator", default=None,
+                    help="multi-process serving: coordinator HOST:PORT"
+                         " (overrides JAX_COORDINATOR_ADDRESS)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="multi-process serving: total process count"
+                         " (overrides REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="multi-process serving: this process's id; 0 runs"
+                         " the scheduler, others the worker follower loop"
+                         " (overrides REPRO_PROCESS_ID)")
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8])
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request SLO for admission control (calibrated"
@@ -174,8 +230,56 @@ def main(argv=None):
             name, pattern=pattern, rate_rps=float(rate), slo_class=cls,
             slo_ms=float(fields[4]) if len(fields) == 5 else None))
 
+    # multi-process topology resolves (and fails readably) BEFORE any jax
+    # import; any of the three flags — or the env trio — opts in
+    from repro.launch.distributed import (DistributedConfigError,
+                                          ENV_NUM_PROCESSES,
+                                          initialize_distributed,
+                                          resolve_spec,
+                                          shutdown_distributed)
+    spec = None
+    if (args.coordinator or args.num_processes is not None
+            or args.process_id is not None
+            or os.environ.get(ENV_NUM_PROCESSES)):
+        try:
+            spec = resolve_spec(args.coordinator, args.num_processes,
+                                args.process_id)
+        except DistributedConfigError as e:
+            raise SystemExit(f"multi-process serving: {e}")
+        if spec.num_processes == 1:
+            spec = None  # degenerate topology: plain single-process serving
+
     mesh = None
-    if args.mesh:
+    mp_mesh = None
+    client = None
+    if spec is not None:
+        if not args.mesh:
+            raise SystemExit("multi-process serving needs --mesh N (local"
+                             " devices per process); rounds plan over"
+                             " mesh x num-processes")
+        if engine_name == "sync":
+            raise SystemExit("multi-process serving needs the pipelined "
+                             "executor; drop --sync / --engine sync")
+        if args.replan:
+            raise SystemExit("--replan is not supported with multi-process"
+                             " serving (workers execute published rounds"
+                             " as planned)")
+        # local backend first (local device ids 0..N-1 on every process),
+        # then the coordination service only — see launch/distributed.py
+        client = initialize_distributed(spec, mode="coordination")
+        import jax
+
+        from repro.launch.mesh import make_multiprocess_data_mesh
+        if len(jax.local_devices()) < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} local devices but "
+                f"only {len(jax.local_devices())} are visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{args.mesh} in every process")
+        mp_mesh = make_multiprocess_data_mesh(
+            spec.num_processes, spec.process_id, args.mesh)
+        mesh = mp_mesh.local_mesh
+    elif args.mesh:
         import jax
 
         from repro.launch.mesh import make_data_mesh
@@ -200,17 +304,39 @@ def main(argv=None):
         net = build_network(name, args.resolution)
         registry.register(net, variant, key=entry)
 
+    if spec is not None and not spec.is_coordinator:
+        try:
+            run_worker_process(args, spec, client, mp_mesh, registry,
+                               cache_dir)
+        finally:
+            shutdown_distributed()
+        return
+
+    coord = None
+    if spec is not None:
+        from repro.serving.vision import MultiprocessCoordinator
+        coord = MultiprocessCoordinator(client, mp_mesh, registry)
+        coord.check_mesh_agreement()
+
     if not 0.0 < args.admission_quantile < 1.0:
         raise SystemExit("--admission-quantile must be in (0, 1)")
     calibrator = LatencyCalibrator(min_samples=args.min_calibration_samples)
-    engine = create_engine(
-        registry, engine_name, cost_model=SystolicCostModel(
-            calibrator=calibrator, n_devices=args.mesh or 1,
-            round_planner=args.round_planner,
-            admission_quantile=args.admission_quantile),
+    engine_kwargs = dict(
         buckets=args.buckets,
         max_in_flight=args.max_in_flight, replan=args.replan,
         probe_interval_ms=args.probe_interval_ms, shed=args.shed)
+    if coord is not None:
+        engine_kwargs["multiprocess"] = coord
+    engine = create_engine(
+        registry, engine_name, cost_model=SystolicCostModel(
+            calibrator=calibrator,
+            n_devices=mp_mesh.global_size if mp_mesh else (args.mesh or 1),
+            round_planner=args.round_planner,
+            admission_quantile=args.admission_quantile,
+            group_granularity=spec.num_processes if spec else 1),
+        **engine_kwargs)
+    if coord is not None:
+        coord.metrics = engine.metrics
     engine.warmup(manifest_path=args.warmup_manifest)
 
     for i in range(args.warm_bursts):
@@ -253,8 +379,18 @@ def main(argv=None):
           f"cache_dir={comp.get('cache_dir')}")
     snap["calibration"] = calibrator.snapshot()
     snap["mode"] = engine_name
-    snap["mesh_devices"] = args.mesh or 1
+    snap["mesh_devices"] = mp_mesh.global_size if mp_mesh else (args.mesh
+                                                                or 1)
+    snap["num_processes"] = spec.num_processes if spec else 1
     snap["round_planner"] = args.round_planner
+    # order-stable digest of every served logit tensor: the multiprocess
+    # CI gate compares this against a single-process run of the same
+    # burst to assert cross-process rounds are bitwise-identical
+    digest = hashlib.sha256()
+    for r in sorted(results, key=lambda r: r.rid):
+        if r.logits is not None:
+            digest.update(np.ascontiguousarray(r.logits).tobytes())
+    snap["logits_sha256"] = digest.hexdigest()
     # the engine's resolved flag, not the CLI's: replanning needs the
     # cross-model round scheduler, so --replan without --mesh stays off
     snap["replan"] = bool(engine.replan)
@@ -271,6 +407,10 @@ def main(argv=None):
         with open(args.json_path, "w") as f:
             json.dump(snap, f, indent=2, sort_keys=True)
     engine.close()
+    if coord is not None:
+        # engine drained first; then release workers and the runtime
+        coord.stop_workers()
+        shutdown_distributed()
 
 
 if __name__ == "__main__":

@@ -31,12 +31,29 @@ def main(argv=None):
                     help="reduced config + host mesh (CPU)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--distributed", action="store_true",
-                    help="call jax.distributed.initialize() (multi-host)")
+                    help="initialize jax.distributed from the coordinator "
+                         "env (JAX_COORDINATOR_ADDRESS, "
+                         "REPRO_NUM_PROCESSES, REPRO_PROCESS_ID) or the "
+                         "flags below")
+    ap.add_argument("--coordinator", default=None,
+                    help="coordinator HOST:PORT (overrides env)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     args = ap.parse_args(argv)
 
-    import jax
     if args.distributed:
-        jax.distributed.initialize()
+        # validate the topology BEFORE jax initializes any backend — a
+        # bare jax.distributed.initialize() with missing/inconsistent env
+        # used to hang or die with an opaque RPC error here
+        from repro.launch.distributed import (DistributedConfigError,
+                                              initialize_distributed,
+                                              resolve_spec)
+        try:
+            spec = resolve_spec(args.coordinator, args.num_processes,
+                                args.process_id)
+        except DistributedConfigError as e:
+            raise SystemExit(f"--distributed: {e}") from None
+        initialize_distributed(spec, mode="global")
 
     from repro import configs as C
     from repro.launch.mesh import make_host_mesh, make_production_mesh

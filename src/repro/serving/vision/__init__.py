@@ -34,6 +34,12 @@ from repro.serving.vision.interface import (ENGINES, PipelinedVisionEngine,
                                             ServingEngine, SyncVisionEngine,
                                             create_engine, register_engine)
 from repro.serving.vision.metrics import LatencyStat, ServeMetrics, percentile
+from repro.serving.vision.multiproc import (LocalExec,
+                                            MultiprocessCoordinator,
+                                            PartHandle, local_exec_plan,
+                                            publish_mesh_fingerprint,
+                                            run_worker, slice_local_rows,
+                                            stitch_shards)
 from repro.serving.vision.registry import (ModelRegistry, RegisteredModel,
                                            default_model_key, device_groups,
                                            device_groups_sized)
@@ -52,7 +58,8 @@ from repro.serving.vision.traffic import (ARRIVAL_PATTERNS, TenantSpec,
 __all__ = [
     "ARRIVAL_PATTERNS", "Batch", "BucketPlan", "DEFAULT_BUCKETS",
     "DEFAULT_CLASS", "DEFAULT_QUANTILES", "ENGINES", "LatencyCalibrator",
-    "LatencyStat", "ModelRegistry", "P2Quantile", "PipelinedVisionEngine",
+    "LatencyStat", "LocalExec", "ModelRegistry", "MultiprocessCoordinator",
+    "P2Quantile", "PartHandle", "PipelinedVisionEngine",
     "QuantileSketch",
     "ReadinessProbe", "RegisteredModel", "RequestQueue",
     "RoundPart", "RoundPlan", "SLOClass", "SLO_CLASSES", "ServeMetrics",
@@ -62,9 +69,11 @@ __all__ = [
     "default_model_key", "device_groups", "device_groups_sized",
     "enable_compilation_cache",
     "fit_image", "form_batch", "form_round", "jain_fairness",
-    "make_mixed_burst", "make_tenant_trace",
+    "local_exec_plan", "make_mixed_burst", "make_tenant_trace",
     "percentile", "persistent_cache_counters", "power_of_two_partitions",
-    "register_engine", "round_groups", "slo_class",
+    "publish_mesh_fingerprint",
+    "register_engine", "round_groups", "run_worker", "slice_local_rows",
+    "slo_class", "stitch_shards",
     "stream_items", "stream_mixed_burst", "submit_mixed_burst",
     "submit_trace", "uneven_sizes", "z_score",
 ]

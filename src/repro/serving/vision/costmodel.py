@@ -108,23 +108,30 @@ class RoundPlan:
         return sum(p.plan.served for p in self.parts)
 
 
-def round_groups(n_models: int, n_devices: int) -> int:
+def round_groups(n_models: int, n_devices: int,
+                 granularity: int = 1) -> int:
     """Number of device groups for a round: the largest power of two that
     divides ``n_devices`` and does not exceed ``n_models`` — every group
-    gets the same contiguous device count, every model gets a group."""
+    gets the same contiguous device count, every model gets a group.
+    ``granularity`` additionally requires every group's size to stay a
+    multiple of it (multi-process serving: a group must span all P
+    processes with equal local stripes, so sizes are multiples of P)."""
     assert n_models >= 1 and n_devices >= 1
     k = 1
-    while k * 2 <= min(n_models, n_devices) and n_devices % (k * 2) == 0:
+    while (k * 2 <= min(n_models, n_devices)
+           and n_devices % (k * 2) == 0
+           and (n_devices // (k * 2)) % granularity == 0):
         k *= 2
     return k
 
 
-def power_of_two_partitions(n_devices: int,
-                            n_parts: int) -> List[List[int]]:
+def power_of_two_partitions(n_devices: int, n_parts: int,
+                            granularity: int = 1) -> List[List[int]]:
     """Every descending list of ``n_parts`` power-of-two group sizes
     summing exactly to ``n_devices`` — the complete layout space of the
     adaptive planner's uneven splits (used by engine warm-up to precompile
-    each reachable device group)."""
+    each reachable device group).  With ``granularity`` g > 1, only sizes
+    that are multiples of g are legal (multi-process group constraint)."""
     out: List[List[int]] = []
 
     def rec(remaining: int, parts_left: int, max_size: int,
@@ -137,7 +144,8 @@ def power_of_two_partitions(n_devices: int,
         while p * 2 <= min(max_size, remaining):
             p *= 2
         while p >= 1:
-            if remaining - p >= parts_left - 1:
+            if (p % granularity == 0
+                    and remaining - p >= (parts_left - 1) * granularity):
                 rec(remaining - p, parts_left - 1, p, acc + [p])
             p //= 2
 
@@ -146,23 +154,25 @@ def power_of_two_partitions(n_devices: int,
     return out
 
 
-def uneven_sizes(weights: Sequence[float],
-                 n_devices: int) -> Optional[List[int]]:
+def uneven_sizes(weights: Sequence[float], n_devices: int,
+                 granularity: int = 1) -> Optional[List[int]]:
     """Power-of-two device-group sizes, one per model, proportional to
     ``weights`` (queue depths) and summing exactly to ``n_devices``.
 
-    Greedy water-filling: every model starts with one device, then the
-    group with the highest weight-per-device repeatedly doubles while a
-    doubling still fits.  Sizes stay powers of two (doubling from 1), so
-    every group keeps the bucket-divisibility property sharding relies on.
-    Returns None when no exact fill exists (more models than devices, or
-    the remainder cannot be expressed by any legal doubling) — the caller
-    simply drops the uneven candidate."""
+    Greedy water-filling: every model starts with ``granularity`` devices
+    (one, single-process), then the group with the highest
+    weight-per-device repeatedly doubles while a doubling still fits.
+    Sizes stay powers of two times the granularity (doubling from it), so
+    every group keeps both the bucket-divisibility property sharding
+    relies on and the spans-all-processes property multi-process rounds
+    require.  Returns None when no exact fill exists (more models than
+    device budget, or the remainder cannot be expressed by any legal
+    doubling) — the caller simply drops the uneven candidate."""
     n = len(weights)
-    if n == 0 or n > n_devices:
+    if n == 0 or n * granularity > n_devices:
         return None
-    sizes = [1] * n
-    free = n_devices - n
+    sizes = [granularity] * n
+    free = n_devices - n * granularity
     while free > 0:
         fits = [i for i in range(n) if sizes[i] <= free]
         if not fits:
@@ -180,7 +190,8 @@ class SystolicCostModel:
                  n_devices: int = 1,
                  round_planner: str = "adaptive",
                  admission_quantile: float = 0.95,
-                 switch_margin: float = 0.25):
+                 switch_margin: float = 0.25,
+                 group_granularity: int = 1):
         assert round_planner in ("fifo", "adaptive", "hybrid"), round_planner
         assert 0.0 < admission_quantile < 1.0, admission_quantile
         assert switch_margin >= 0.0, switch_margin
@@ -189,6 +200,12 @@ class SystolicCostModel:
         self.baseline_dataflow = baseline_dataflow
         self.calibrator = calibrator
         self.n_devices = max(1, int(n_devices))
+        # multi-process serving: every device group must span all P
+        # processes with equal local stripes, so group sizes (and the mesh
+        # itself) stay multiples of P.  1 = single-process, unconstrained.
+        self.group_granularity = max(1, int(group_granularity))
+        assert self.n_devices % self.group_granularity == 0, \
+            (self.n_devices, self.group_granularity)
         # "adaptive": plan_round scores serial/even/uneven compositions and
         # returns the argmin; "hybrid": adaptive plus compositions whose
         # uneven groups host several models back-to-back; "fifo": the
@@ -411,7 +428,7 @@ class SystolicCostModel:
                          ) -> Tuple[List[int], List[int]]:
         """(model -> group index, group sizes) for the structural even
         split: round_groups equal groups, models dealt round-robin."""
-        k = round_groups(n_models, self.n_devices)
+        k = round_groups(n_models, self.n_devices, self.group_granularity)
         return [i % k for i in range(n_models)], [self.n_devices // k] * k
 
     def _uneven_assignment(self, models: Sequence[Tuple[RegisteredModel, int]]
@@ -428,7 +445,7 @@ class SystolicCostModel:
         if len(models) < 2:
             return None
         by_model = uneven_sizes([max(1, depth) for _, depth in models],
-                                self.n_devices)
+                                self.n_devices, self.group_granularity)
         if by_model is None:
             return None
         order = sorted(range(len(by_model)),
@@ -463,7 +480,7 @@ class SystolicCostModel:
         candidate group).  Returns the argmin layout by predicted ms per
         served request, or None when no hybrid layout exists."""
         n = len(models)
-        if n < 3 or self.n_devices < 2:
+        if n < 3 or self.n_devices < 2 * self.group_granularity:
             return None
         q = self._strategy_quantile("hybrid", quantile)
         # one bucket plan per (model, group width) serves the whole sweep:
@@ -483,7 +500,8 @@ class SystolicCostModel:
         best: Optional[Tuple[List[int], List[int]]] = None
         best_score = 0.0
         for k in range(2, n):
-            for sizes in power_of_two_partitions(self.n_devices, k):
+            for sizes in power_of_two_partitions(self.n_devices, k,
+                                                 self.group_granularity):
                 group_of = self._pack_lpt(
                     n, sizes, lambda i, w: plan_for(i, w).predicted_ms)
                 group_ms = [0.0] * len(sizes)

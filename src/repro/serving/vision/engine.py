@@ -236,11 +236,29 @@ class VisionServeEngine:
                  replan_quantum_ms: Optional[float] = None,
                  probe: Optional[ReadinessProbe] = None,
                  probe_interval_ms: float = 0.2,
-                 shed: bool = False):
+                 shed: bool = False,
+                 multiprocess=None):
         self.registry = registry
         # mesh comes in through the registry (it owns placement); the
         # engine owns scheduling over its device list
         self._devices = getattr(registry, "devices", None)
+        # multi-process serving (see multiproc.py): the engine runs on
+        # process 0 only and schedules over the LOGICAL universe spanning
+        # every process — groups are broadcast per round, each process
+        # executes its addressable stripe, shards are stitched by the
+        # completer.  The registry keeps the process-local mesh.
+        self.multiprocess = multiprocess
+        if multiprocess is not None:
+            if not pipelined:
+                raise ValueError(
+                    "multiprocess serving requires the pipelined engine "
+                    "(rounds are broadcast from the device thread)")
+            self._devices = multiprocess.universe
+            cross_model = True
+            # mid-flight replanning keys off per-group jax.Array readiness;
+            # a cross-process part's readiness lives on other processes, so
+            # replanning is disabled rather than half-observed
+            replan = False
         ndev = len(self._devices) if self._devices else 1
         self.cost_model = cost_model or SystolicCostModel(
             calibrator=LatencyCalibrator(), n_devices=ndev)
@@ -257,6 +275,16 @@ class VisionServeEngine:
                 f"cost model plans for {cm_ndev} device(s) but the "
                 f"registry mesh has {ndev}; construct the cost model with "
                 f"n_devices={ndev}")
+        if multiprocess is not None:
+            gran = getattr(self.cost_model, "group_granularity", 1)
+            n_procs = multiprocess.mesh.num_processes
+            if gran != n_procs:
+                # a group that does not span every process with equal
+                # stripes cannot be executed by the stripe protocol
+                raise ValueError(
+                    f"multiprocess serving over {n_procs} processes needs "
+                    f"a cost model with group_granularity={n_procs}, got "
+                    f"{gran}")
         self.buckets = tuple(sorted(buckets))
         self.metrics = metrics or ServeMetrics(clock)
         self._clock = clock
@@ -393,7 +421,9 @@ class VisionServeEngine:
             active = {m for m, _, _ in self._queue.snapshot()}
             active.add(model_key)
             ndev = len(self._devices)
-            extra["group_size"] = ndev // round_groups(len(active), ndev)
+            gran = getattr(self.cost_model, "group_granularity", 1)
+            extra["group_size"] = ndev // round_groups(len(active), ndev,
+                                                       gran)
         return self.cost_model.admit(
             model, slo_ms, self._queue.pending(model_key), self.buckets,
             self._backlog_ms(model_key), **extra)
@@ -799,13 +829,34 @@ class VisionServeEngine:
                     # dispatch every part back-to-back: dispatch is async,
                     # so parts on different device groups execute
                     # concurrently (independent models -> independent
-                    # devices); the completer blocks on readiness
+                    # devices); the completer blocks on readiness.  In
+                    # multiprocess mode the round spec is broadcast FIRST
+                    # so worker stripes start while the coordinator's own
+                    # dispatches are still being issued.
                     outs = []
-                    for p in item.parts:
+                    mp_round = None
+                    if self.multiprocess is not None:
                         try:
-                            logits = self.registry.apply(
-                                p.batch.model, p.batch.images,
-                                devices=p.devices)
+                            mp_round = self.multiprocess.begin_round(
+                                [(p.batch.model, p.batch.images,
+                                  tuple(d.id for d in p.devices))
+                                 for p in item.parts])
+                        except Exception as exc:
+                            for p in item.parts:
+                                outs.append((p, _BatchError(exc),
+                                             self._clock()))
+                            self._complete_q.put((item, outs, t0))
+                            continue
+                    for idx, p in enumerate(item.parts):
+                        try:
+                            if mp_round is not None:
+                                logits = self.multiprocess.dispatch(
+                                    mp_round, idx, p.batch.model,
+                                    p.batch.images, p.devices)
+                            else:
+                                logits = self.registry.apply(
+                                    p.batch.model, p.batch.images,
+                                    devices=p.devices)
                         except Exception as exc:
                             logits = _BatchError(exc)
                         outs.append((p, logits, self._clock()))
@@ -833,7 +884,11 @@ class VisionServeEngine:
             try:
                 if isinstance(logits, _BatchError):
                     raise logits.exc
-                logits = jax.block_until_ready(logits)
+                # a multiprocess PartHandle blocks on the local stripe AND
+                # gathers worker shards; plain outputs block on the device
+                mat = getattr(logits, "materialize", None)
+                logits = (mat() if mat is not None
+                          else jax.block_until_ready(logits))
                 t1 = self._clock()
                 self._finalize(p, np.asarray(logits), t_disp, t1,
                                in_flight=False,
@@ -979,7 +1034,8 @@ class VisionServeEngine:
             # warm them all, or the first round on a fresh group compiles
             # under traffic
             seen = set()
-            widths = {round_groups(m, len(self._devices))
+            gran = getattr(self.cost_model, "group_granularity", 1)
+            widths = {round_groups(m, len(self._devices), gran)
                       for m in range(1, n_models + 1)}
             for k_groups in sorted(widths):
                 if k_groups > 1:        # full mesh is warmed by default
@@ -998,7 +1054,7 @@ class VisionServeEngine:
                 # prewarm compiles every model on every warmed group.
                 for m in range(2, n_models + 1):
                     for sizes in power_of_two_partitions(
-                            len(self._devices), m):
+                            len(self._devices), m, gran):
                         for grp in device_groups_sized(self._devices, sizes):
                             if len(grp) < len(self._devices) \
                                     and grp not in seen:
@@ -1030,6 +1086,14 @@ class VisionServeEngine:
         bks = tuple(buckets) if buckets is not None else self.buckets
         ks = list(keys if keys is not None else self.registry.keys())
         groups = self._reachable_groups(len(ks))
+        if self.multiprocess is not None and self._devices:
+            # the serial strategy dispatches on the full logical universe,
+            # whose per-process stripe entry (local bucket = bucket / P)
+            # differs from the default full-LOCAL-mesh warm — warm it
+            # explicitly like any other group
+            full = tuple(self._devices)
+            if full not in groups:
+                groups = groups + [full]
         for k in ks:
             model = self.registry.get(k)
             for b in bks:
@@ -1054,6 +1118,12 @@ class VisionServeEngine:
         if warm_entry is not None:
             hosted = set()
             for k, b, ids in entries:
+                if self.multiprocess is not None and ids is not None:
+                    # ids name LOGICAL universe devices: warm this
+                    # process's stripe of the group (the same entry every
+                    # worker's stripe resolves to — see multiproc.py)
+                    self._warm_multiprocess_entry(k, b, ids, hosted)
+                    continue
                 devs = None
                 if ids is not None:
                     by_id = getattr(self.registry, "devices_by_id", None)
@@ -1069,26 +1139,61 @@ class VisionServeEngine:
         delta = counters_delta(before)
         if manifest_path and not replayed:
             self._write_manifest(manifest_path, entries)
+        if self.multiprocess is not None:
+            # broadcast AFTER the coordinator warmed (and the persistent
+            # cache was populated), so every worker warm is a pure hit
+            self.multiprocess.broadcast_warmup(
+                self._manifest_fingerprint() or "", entries)
         self.metrics.on_warmup((time.perf_counter() - t_w0) * 1e3,
                                len(entries), replayed,
                                pcache_hits=int(delta["hits"]),
                                pcache_misses=int(delta["misses"]))
         return entries
 
+    def _warm_multiprocess_entry(self, k: str, b: int,
+                                 ids: Sequence[int], hosted: set) -> None:
+        """Warm this process's stripe of one logical (model, bucket,
+        universe-group) entry — the jit entry round dispatch will actually
+        execute, identical (same local device ids, same local bucket) on
+        every process."""
+        from repro.serving.vision.multiproc import local_exec_plan
+        mp = self.multiprocess
+        plan = local_exec_plan(mp.mesh, mp.group_by_ids(ids), b)
+        if plan is None:
+            return
+        self.registry.warm_entry(k, plan.local_bucket,
+                                 devices=plan.devices,
+                                 host=(k, b) not in hosted)
+        hosted.add((k, b))
+
+    def _manifest_fingerprint(self) -> Optional[str]:
+        """What a warmup manifest is stamped with: the registry's backend
+        fingerprint, extended with the multiprocess mesh topology when one
+        is attached — a manifest whose group ids name LOGICAL universe
+        devices must never replay into a single-process engine (whose
+        local ids they would silently alias), and vice versa."""
+        fp_fn = getattr(self.registry, "backend_fingerprint", None)
+        if fp_fn is None:
+            return None
+        fp = fp_fn()
+        if self.multiprocess is not None:
+            fp = f"{fp}:{self.multiprocess.mesh.fingerprint()}"
+        return fp
+
     def _load_manifest(self, path: str,
                        ks: Sequence[str]) -> Optional[List[tuple]]:
         """Entries from a warmup manifest, or None when it is missing,
         unreadable, fingerprint-stale, or names no registered model —
         every failure mode falls back to deriving the set fresh."""
-        fp_fn = getattr(self.registry, "backend_fingerprint", None)
-        if fp_fn is None or not os.path.exists(path):
+        fp = self._manifest_fingerprint()
+        if fp is None or not os.path.exists(path):
             return None
         try:
             with open(path) as f:
                 manifest = json.load(f)
         except (OSError, json.JSONDecodeError, ValueError):
             return None
-        if manifest.get("fingerprint") != fp_fn():
+        if manifest.get("fingerprint") != fp:
             return None
         known = set(ks)
         entries = []
@@ -1104,12 +1209,12 @@ class VisionServeEngine:
     def _write_manifest(self, path: str, entries: List[tuple]) -> None:
         """Persist the warmed layout set (atomic rename; fingerprint-
         stamped so a drifted backend/model set invalidates it)."""
-        fp_fn = getattr(self.registry, "backend_fingerprint", None)
-        if fp_fn is None:
+        fp = self._manifest_fingerprint()
+        if fp is None:
             return
         data = {
             "version": 1,
-            "fingerprint": fp_fn(),
+            "fingerprint": fp,
             "created_unix": time.time(),
             "entries": [[k, b, list(ids) if ids is not None else None]
                         for k, b, ids in entries],
@@ -1258,6 +1363,10 @@ class VisionServeEngine:
             comp = dict(snap.get("compilation", {}))
             comp.update(stats())
             snap["compilation"] = comp
+        if self.multiprocess is not None:
+            mp = dict(snap.get("multiprocess", {}))
+            mp.update(self.multiprocess.mesh.describe())
+            snap["multiprocess"] = mp
         return snap
 
     # -- shutdown -------------------------------------------------------------

@@ -1,0 +1,204 @@
+"""Multi-process topology resolution, the logical device universe, and
+granularity-constrained round planning (repro.launch.distributed,
+launch.mesh multiprocess pieces, costmodel group_granularity).
+
+Everything here is process-local math — no coordination service, no
+subprocess pairs (that end-to-end path is tests/test_serve_multiprocess.py
+and scripts/multiprocess_check.py).  The one subprocess below asserts
+``train.py --distributed`` fails fast with a readable error instead of
+the bare ``jax.distributed.initialize()`` hang it used to be.
+"""
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro.launch import distributed as dist
+from repro.launch import env as env_mod
+from repro.launch.distributed import (DistributedConfigError,
+                                      DistributedSpec, resolve_spec)
+from repro.launch.mesh import (LogicalDevice, MultiprocessDataMesh,
+                               logical_universe)
+from repro.serving.vision.costmodel import (SystolicCostModel,
+                                            power_of_two_partitions,
+                                            round_groups, uneven_sizes)
+
+
+# -- spec resolution ---------------------------------------------------------
+
+def test_resolve_spec_explicit_args():
+    s = resolve_spec("10.0.0.1:8476", 2, 1, env={})
+    assert s == DistributedSpec("10.0.0.1:8476", 2, 1)
+    assert not s.is_coordinator
+    assert resolve_spec("h:1", 2, 0, env={}).is_coordinator
+
+
+def test_resolve_spec_env_fallback_and_precedence():
+    env = {dist.ENV_COORDINATOR: "envhost:1111",
+           dist.ENV_NUM_PROCESSES: "4",
+           dist.ENV_PROCESS_ID: "3"}
+    assert resolve_spec(env=env) == DistributedSpec("envhost:1111", 4, 3)
+    # explicit arguments win over the environment, per field
+    s = resolve_spec("cli:2222", process_id=0, env=env)
+    assert s == DistributedSpec("cli:2222", 4, 0)
+
+
+@pytest.mark.parametrize("kwargs,needle", [
+    (dict(env={}), "coordinator"),
+    (dict(coordinator_address="nocolon", env={}), "HOST:PORT"),
+    (dict(coordinator_address="h:notaport", env={}), "HOST:PORT"),
+    (dict(coordinator_address="h:1", env={}), dist.ENV_NUM_PROCESSES),
+    (dict(coordinator_address="h:1", num_processes=2, env={}),
+     dist.ENV_PROCESS_ID),
+    (dict(coordinator_address="h:1", num_processes=0, process_id=0,
+          env={}), ">= 1"),
+    (dict(coordinator_address="h:1", num_processes=2, process_id=2,
+          env={}), "out of range"),
+    (dict(coordinator_address="h:1", env={dist.ENV_NUM_PROCESSES: "two",
+                                          dist.ENV_PROCESS_ID: "0"}),
+     "integer"),
+])
+def test_resolve_spec_readable_errors(kwargs, needle):
+    with pytest.raises(DistributedConfigError, match=needle):
+        resolve_spec(**kwargs)
+
+
+def test_spec_env_exports_round_trip():
+    s = DistributedSpec("host:9999", 3, 2)
+    assert resolve_spec(env=s.env_exports()) == s
+
+
+def test_env_shim_constants_match_distributed():
+    # env.py re-declares the variable names to stay jax-import-free and
+    # repro-import-free; the duplication must never drift
+    assert env_mod.ENV_COORDINATOR == dist.ENV_COORDINATOR
+    assert env_mod.ENV_NUM_PROCESSES == dist.ENV_NUM_PROCESSES
+    assert env_mod.ENV_PROCESS_ID == dist.ENV_PROCESS_ID
+
+
+def test_distributed_module_does_not_import_jax():
+    # spec resolution must be usable before backend init, like env.py
+    code = ("import sys; import repro.launch.distributed; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+
+
+# -- logical universe / stripes ----------------------------------------------
+
+def _stub_mesh(num_processes, process_id, n_local):
+    """MultiprocessDataMesh over stub devices — the stripe/fingerprint
+    math never touches jax, only ``.devices.flat`` entries with
+    ``id``/``platform`` attributes."""
+    devs = np.empty(n_local, dtype=object)
+    for i in range(n_local):
+        devs[i] = types.SimpleNamespace(id=i, platform="cpu")
+    return MultiprocessDataMesh(
+        local_mesh=types.SimpleNamespace(devices=devs),
+        num_processes=num_processes, process_id=process_id,
+        n_local=n_local,
+        universe=logical_universe(num_processes, n_local))
+
+
+def test_logical_universe_interleaves_processes():
+    u = logical_universe(2, 4)
+    assert [d.process for d in u] == [0, 1, 0, 1, 0, 1, 0, 1]
+    assert [d.local for d in u] == [0, 0, 1, 1, 2, 2, 3, 3]
+    # global ids are stable (process * n_local + local) and unique
+    assert sorted(d.id for d in u) == list(range(8))
+    assert u[1] == LogicalDevice(id=4, process=1, local=0)
+
+
+def test_aligned_slices_give_identical_local_stripes():
+    """The property warm worker joins rely on: any contiguous slice with
+    offset and length multiples of P gives every process the SAME local
+    device index range — so every process compiles (and cache-keys) the
+    identical program for its stripe."""
+    P, n_local = 2, 4
+    u = logical_universe(P, n_local)
+    for off in range(0, P * n_local, P):
+        for size in range(P, P * n_local - off + 1, P):
+            group = u[off:off + size]
+            ranges = set()
+            for pid in range(P):
+                locs = tuple(d.local for d in group if d.process == pid)
+                assert locs == tuple(
+                    range(off // P, (off + size) // P))
+                ranges.add(locs)
+            assert len(ranges) == 1
+
+
+def test_stripe_returns_owned_positions_and_local_devices():
+    m = _stub_mesh(2, 0, 4)
+    group = m.universe[2:6]              # aligned: offset 2, size 4
+    devs, pos = m.stripe(group)
+    assert pos == [0, 2]                 # positions owned by process 0
+    assert [d.id for d in devs] == [1, 2]
+    devs1, pos1 = m.stripe(group, process_id=1)
+    assert pos1 == [1, 3]
+    assert [d.id for d in devs1] == [1, 2]   # identical local ids
+
+
+def test_mesh_fingerprint_is_process_independent():
+    m0, m1 = _stub_mesh(2, 0, 4), _stub_mesh(2, 1, 4)
+    assert m0.fingerprint() == m1.fingerprint()
+    assert m0.fingerprint() != _stub_mesh(2, 0, 2).fingerprint()
+    assert m0.fingerprint() != _stub_mesh(4, 0, 4).fingerprint()
+    d = m0.describe()
+    assert d["global_size"] == 8 and d["mesh_fingerprint"]
+
+
+def test_by_id_and_universe_ids():
+    m = _stub_mesh(2, 0, 3)
+    assert m.by_id(m.universe_ids) == m.universe
+    assert m.by_id([3]) == (LogicalDevice(id=3, process=1, local=0),)
+
+
+# -- group granularity -------------------------------------------------------
+
+def test_round_groups_respects_granularity():
+    assert round_groups(4, 8) == 4          # ungated: 4 groups of 2
+    assert round_groups(4, 8, granularity=4) == 2   # sizes stay multiples
+    assert round_groups(2, 8, granularity=2) == 2   # groups of 4: fine
+    assert round_groups(5, 8, granularity=8) == 1   # only the full mesh
+
+
+def test_power_of_two_partitions_granularity():
+    for parts in power_of_two_partitions(8, 3, granularity=2):
+        assert all(p % 2 == 0 for p in parts)
+        assert sum(parts) <= 8
+    assert power_of_two_partitions(8, 2, granularity=2) == [[4, 4]]
+
+
+def test_uneven_sizes_granularity():
+    sizes = uneven_sizes([3.0, 1.0], 8, granularity=2)
+    assert sizes is not None and sum(sizes) == 8
+    assert all(s % 2 == 0 for s in sizes)
+    # not enough devices for one granule per model
+    assert uneven_sizes([1.0, 1.0, 1.0], 4, granularity=2) is None
+
+
+def test_cost_model_granularity_divides_devices():
+    SystolicCostModel(n_devices=8, group_granularity=2)
+    with pytest.raises(AssertionError):
+        SystolicCostModel(n_devices=6, group_granularity=4)
+
+
+# -- train.py fail-fast ------------------------------------------------------
+
+def test_train_distributed_fails_fast_with_readable_error():
+    """Regression: --distributed with no topology used to reach a bare
+    jax.distributed.initialize() that hung or died with an RPC stack; now
+    it must exit immediately, pointing at the missing flag/env var."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "smollm_135m", "--smoke", "--distributed"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "--distributed: no coordinator address" in proc.stderr
+    assert "--coordinator" in proc.stderr
+    assert dist.ENV_COORDINATOR in proc.stderr

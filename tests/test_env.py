@@ -48,6 +48,69 @@ def test_configure_preserves_caller_choices():
     assert env2["XLA_FLAGS"] == "--xla_foo=1"
 
 
+def test_configure_exports_coordinator_trio():
+    env = {}
+    configure(coordinator_address="10.1.2.3:8476", num_processes=2,
+              process_id=1, env=env)
+    assert env["JAX_COORDINATOR_ADDRESS"] == "10.1.2.3:8476"
+    assert env["REPRO_NUM_PROCESSES"] == "2"
+    assert env["REPRO_PROCESS_ID"] == "1"
+    # process id 0 must still export (falsy-int trap)
+    env0 = {}
+    configure(process_id=0, env=env0)
+    assert env0["REPRO_PROCESS_ID"] == "0"
+    # absent args leave the environment alone
+    untouched = {}
+    configure(0, env=untouched)
+    assert "JAX_COORDINATOR_ADDRESS" not in untouched
+    assert "REPRO_NUM_PROCESSES" not in untouched
+
+
+def test_configure_cache_dir_exports_floors():
+    env = {}
+    configure(compilation_cache_dir="/tmp/cc", env=env)
+    assert env["JAX_COMPILATION_CACHE_DIR"] == "/tmp/cc"
+    assert env["JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS"] == "0"
+    assert env["JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES"] == "-1"
+    # caller-set floors win
+    env2 = {"JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": "2"}
+    configure(compilation_cache_dir="/tmp/cc", env=env2)
+    assert env2["JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS"] == "2"
+
+
+def test_configured_env_propagates_into_child_process():
+    """The point of exporting (rather than plumbing flags): a spawned
+    child resolves the same topology, cache dir, and virtual-device count
+    from its inherited environment alone."""
+    env = {"PATH": "/usr/bin:/bin", "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_foo=1"}
+    configure(4, compilation_cache_dir="/tmp/cc_child",
+              coordinator_address="127.0.0.1:7777", num_processes=2,
+              process_id=1, env=env)
+    code = (
+        "import json, os\n"
+        "from repro.launch.distributed import resolve_spec\n"
+        "s = resolve_spec()\n"
+        "print(json.dumps({'addr': s.coordinator_address,"
+        " 'np': s.num_processes, 'pid': s.process_id,"
+        " 'xla': os.environ['XLA_FLAGS'],"
+        " 'cache': os.environ['JAX_COMPILATION_CACHE_DIR'],"
+        " 'floor': os.environ["
+        "'JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS']}))\n")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    import json
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["addr"] == "127.0.0.1:7777"
+    assert out["np"] == 2 and out["pid"] == 1
+    # the caller's XLA flags survived the host-device-count merge
+    assert out["xla"] == \
+        "--xla_foo=1 --xla_force_host_platform_device_count=4"
+    assert out["cache"] == "/tmp/cc_child"
+    assert out["floor"] == "0"
+
+
 def test_configure_step_markers_are_tpu_gated_and_off_by_default():
     tpu = {"JAX_PLATFORMS": "tpu"}
     configure(0, env=tpu)
